@@ -1,0 +1,89 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.orchestrator import MLLMGlobalOrchestrator
+from repro.data.synthetic import TaskMix, sample_examples
+
+
+def sample_instances(rng, d, per, modalities=("vision", "audio")):
+    return [sample_examples(rng, per, TaskMix(), modalities) for _ in range(d)]
+
+
+def timed(fn, *args, repeat=3, **kw):
+    best = np.inf
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6  # us
+
+
+def simulated_iteration_utilization(report) -> float:
+    """Paper's MFU proxy: one iteration's useful/straggler time over all
+    phases (each phase synchronizes across DP, so phase time = max cost)."""
+    total_max = sum(report.phase_max_cost.values())
+    total_mean = sum(float(np.mean(c)) for c in report.phase_costs.values())
+    return total_mean / total_max if total_max else 1.0
+
+
+def orchestrate(arch, d, per, *, balance=True, balance_encoders=True,
+                encoder_algorithm_override=None, instances_per_node=None,
+                seed=0, margin=3.0, skip_pack=True):
+    """Plan-only run (packing skipped for speed when skip_pack)."""
+    cfg = get_config(arch)
+    rng = np.random.default_rng(seed)
+    examples = sample_instances(rng, d, per)
+    orch = MLLMGlobalOrchestrator(
+        cfg, d, balance=balance, balance_encoders=balance_encoders,
+        encoder_algorithm_override=encoder_algorithm_override,
+        instances_per_node=instances_per_node, vocab=512,
+    )
+    if skip_pack:
+        report = plan_only(orch, examples)
+        return orch, examples, report
+    caps = orch.default_capacities(examples, margin=margin)
+    batch, report = orch.plan_and_pack(examples, caps, rng)
+    return orch, examples, report
+
+
+def plan_only(orch: MLLMGlobalOrchestrator, examples):
+    """Run dispatchers + composition without array packing."""
+    import dataclasses
+    import time as _t
+
+    import numpy as _np
+
+    from repro.core.rearrangement import compose
+    from repro.core.orchestrator import _remap_subset_slots
+
+    cfg = orch.cfg
+    t0 = _t.perf_counter()
+    key = "text" if cfg.family == "audio" else "total"
+    llm_lengths = [
+        _np.array([ex.text_len if key == "text" else ex.total_len(orch.downsample)
+                   for ex in insts], _np.int64)
+        for insts in examples
+    ]
+    llm_plan = orch.llm_dispatcher.plan(llm_lengths)
+    enc_plans, composed = {}, {}
+    for e in cfg.encoders:
+        lens = [
+            _np.array([getattr(ex, f"{e.name}_meta") for ex in insts
+                       if getattr(ex, f"{e.name}_meta") > 0], _np.int64)
+            for insts in examples
+        ]
+        plan = orch.enc_dispatchers[e.name].plan(lens)
+        enc_plans[e.name] = plan
+        pi_e = _remap_subset_slots(plan.pi, examples, e.name)
+        comp = compose(llm_plan.pi, pi_e)
+        comp = dataclasses.replace(
+            comp, lengths=_np.ceil(comp.lengths / e.downsample).astype(_np.int64))
+        composed[e.name] = comp
+    solve_ms = (_t.perf_counter() - t0) * 1e3
+    return orch._report(llm_plan, enc_plans, composed, solve_ms)

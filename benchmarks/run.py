@@ -1,0 +1,233 @@
+"""Benchmark harness -- one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+
+Output: ``name,us_per_call,derived`` CSV rows, one per measurement, plus
+a trailing comment line per benchmark comparing against the paper's own
+claim (reproduction check).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")  # allow `python -m benchmarks.run` from repo root
+
+from repro.configs import get_config
+from repro.core.balancing import post_balance
+from repro.core.cost_model import CostModel
+from repro.core.nodewise import nodewise_rearrange
+from repro.data.synthetic import modality_ratio_stats, sample_examples
+
+from benchmarks.common import (
+    orchestrate,
+    plan_only,
+    sample_instances,
+    simulated_iteration_utilization,
+    timed,
+)
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def note(text: str) -> None:
+    print(f"# {text}", flush=True)
+
+
+# ----------------------------------------------------------------------
+# Fig. 3: Modality Composition Incoherence in the synthetic mix.
+# ----------------------------------------------------------------------
+def bench_incoherence(quick=False):
+    rng = np.random.default_rng(0)
+    n = 2_000 if quick else 20_000
+    (examples), us = timed(lambda: sample_examples(rng, n), repeat=1)
+    stats = modality_ratio_stats(examples, {"vision": 1, "audio": 2})
+    for mod in ("vision", "audio"):
+        r = stats[mod]
+        emit(f"incoherence_{mod}_ratio_std", us / n,
+             f"mean={r.mean():.3f} std={r.std():.3f} p95={np.percentile(r, 95):.3f}")
+    note("paper Fig.3: both modality ratios 'bear substantial variance' -> "
+         "std well above 0.1 reproduces the premise")
+
+
+# ----------------------------------------------------------------------
+# Fig. 8/9/10: simulated MFU -- no balance vs LLM-only (pre-balancing
+# equivalent) vs full OrchMLLM, for the paper's three MLLM sizes.
+# ----------------------------------------------------------------------
+def bench_balance_mfu(quick=False):
+    d = 32 if quick else 128  # paper microbenchmarks use 128 GPUs
+    per = {"mllm_10b": 60, "mllm_18b": 40, "mllm_84b": 20}
+    for arch in ("mllm_10b", "mllm_18b", "mllm_84b"):
+        p = max(8, per[arch] // (4 if quick else 1))
+        utils = {}
+        for mode, kw in (
+            ("none", dict(balance=False)),
+            ("llm_only", dict(balance=True, balance_encoders=False)),
+            ("full", dict(balance=True)),
+        ):
+            (_, _, report), us = timed(
+                lambda kw=kw: orchestrate(arch, d, p, **kw), repeat=1)
+            u = simulated_iteration_utilization(report)
+            utils[mode] = u
+            emit(f"mfu_sim_{arch}_{mode}", us, f"util={u:.3f} "
+                 + " ".join(f"{k}={v:.2f}" for k, v in report.phase_utilization.items()))
+        ratio = utils["full"] / max(utils["none"], 1e-9)
+        ratio2 = utils["full"] / max(utils["llm_only"], 1e-9)
+        emit(f"mfu_sim_{arch}_speedup", 0.0,
+             f"full/none={ratio:.2f}x full/llm_only={ratio2:.2f}x")
+    note("paper Fig.8/9: OrchMLLM vs no-balance = 1.5-2.0x; "
+         "Fig.10: full > LLM-only balance, gap grows with model size")
+
+
+# ----------------------------------------------------------------------
+# Fig. 11: rigid algorithms (all rmpad / all pad) vs tailored.
+# ----------------------------------------------------------------------
+def bench_algorithms(quick=False):
+    d = 32 if quick else 128
+    for arch in ("mllm_10b", "mllm_18b"):
+        utils = {}
+        for mode, override in (("tailored", None), ("all_rmpad", "nopad"),
+                               ("all_pad", "pad")):
+            (_, _, report), us = timed(
+                lambda o=override: orchestrate(
+                    arch, d, 24, encoder_algorithm_override=o), repeat=1)
+            u = simulated_iteration_utilization(report)
+            utils[mode] = u
+            emit(f"algo_{arch}_{mode}", us, f"util={u:.3f}")
+        emit(f"algo_{arch}_tailored_gain", 0.0,
+             f"vs_rmpad={utils['tailored'] / utils['all_rmpad']:.3f}x "
+             f"vs_pad={utils['tailored'] / utils['all_pad']:.3f}x")
+    note("paper Fig.11: a single rigid algorithm for all phases loses MFU "
+         "vs per-phase tailored algorithms (>= 1.0x gains expected)")
+
+
+# ----------------------------------------------------------------------
+# Fig. 12/13: communicator volume -- All-Gather vs All-to-All; node-wise
+# rearrangement inter-node reduction.
+# ----------------------------------------------------------------------
+def bench_comm_volume(quick=False):
+    rng = np.random.default_rng(1)
+    d, c = (32, 4) if quick else (64, 8)
+    lens = [rng.lognormal(5.5, 0.8, size=24).astype(np.int64) + 1 for _ in range(d)]
+    cm = CostModel()
+    pi, us = timed(lambda: post_balance(lens, d, cm), repeat=3)
+    cap = int(max(l.sum() for l in lens))
+    total = int(pi.lengths.sum())
+    moved = total - pi.self_volume()
+    allgather = d * (d - 1) * cap
+    emit("comm_allgather_tokens", us, f"volume={allgather}")
+    emit("comm_a2a_tokens", us, f"volume={moved} "
+         f"ratio_vs_allgather={moved / allgather:.4f}")
+    note("paper Eq.3 vs Eq.4: All-to-All volume is O(max L_i), All-Gather "
+         "O((d-1) max L_i) -> ratio ~ 1/d expected")
+
+    before = int(pi.internode_volume(c).max())
+    pi_nw, us2 = timed(lambda: nodewise_rearrange(pi, c), repeat=1)
+    after = int(pi_nw.internode_volume(c).max())
+    emit("comm_nodewise_internode_max", us2,
+         f"before={before} after={after} ratio={after / max(before, 1):.3f}")
+    # Per-modality analog on a real multimodal plan:
+    _, _, report = orchestrate("mllm_10b", d, 16, instances_per_node=c, seed=3)
+    for mod, v in report.comm_volume.items():
+        inter = report.internode_volume.get(mod, 0)
+        emit(f"comm_nodewise_{mod}", 0.0,
+             f"total={v['total']} self={v['self']} internode_max={inter}")
+    note("paper Fig.13: node-wise rearrangement cuts inter-node volume to "
+         "0.436-0.722x of the plain plan")
+
+
+# ----------------------------------------------------------------------
+# Table 2: dispatcher overhead vs cluster size.
+# ----------------------------------------------------------------------
+def bench_overhead(quick=False):
+    sizes = (64, 128, 256) if quick else (64, 128, 256, 512, 1024, 2560)
+    rng = np.random.default_rng(2)
+    for d in sizes:
+        examples = sample_instances(rng, d, 8)
+        cfg = get_config("mllm_10b")
+        from repro.core.orchestrator import MLLMGlobalOrchestrator
+
+        orch = MLLMGlobalOrchestrator(cfg, d, vocab=512)
+        report, us = timed(lambda: plan_only(orch, examples), repeat=1)
+        emit(f"overhead_d{d}", us, f"solve_ms={report.solve_ms:.1f}")
+    note("paper Table 2: overhead 16.7ms @64 -> 53.9ms @2560 GPUs (<2% of "
+         "fwd); ours is host-side solve time (comm overlapped per S6)")
+
+
+# ----------------------------------------------------------------------
+# Kernel microbench: Pallas (interpret) vs pure-jnp reference.
+# ----------------------------------------------------------------------
+def bench_kernels(quick=False):
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import flash_attention_op, selective_scan_op
+    from repro.kernels.ref import flash_attention_ref, selective_scan_ref
+
+    rng = np.random.default_rng(3)
+    B, H, T, D = 1, 2, 256, 64
+    q = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    seg = jnp.ones((B, T), jnp.int32)
+    pos = jnp.asarray(np.arange(T, dtype=np.int32)[None])
+    args = (q, q, q, seg, seg, pos, pos)
+    out_k, us_k = timed(lambda: flash_attention_op(*args, interpret=True)
+                        .block_until_ready())
+    out_r, us_r = timed(lambda: flash_attention_ref(*args).block_until_ready())
+    err = float(np.abs(np.asarray(out_k) - np.asarray(out_r)).max())
+    emit("kernel_flash_attn_interpret", us_k, f"max_err_vs_ref={err:.2e}")
+    emit("kernel_flash_attn_ref", us_r, "oracle")
+
+    T2, di, N = 256, 128, 16
+    u = jnp.asarray(rng.normal(size=(T2, di)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(0.05, 0.02, size=(T2, di))), jnp.float32)
+    A = jnp.asarray(-np.abs(rng.normal(1, 0.3, size=(di, N))), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(T2, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(T2, N)), jnp.float32)
+    Dv = jnp.zeros((di,), jnp.float32)
+    sg = jnp.ones((T2,), jnp.int32)
+    out_k, us_k = timed(lambda: selective_scan_op(
+        u, dt, A, Bm, Cm, Dv, sg, block_d=64, chunk=64, interpret=True
+    ).block_until_ready())
+    out_r, us_r = timed(lambda: selective_scan_ref(
+        u, dt, A, Bm, Cm, Dv, sg).block_until_ready())
+    err = float(np.abs(np.asarray(out_k) - np.asarray(out_r)).max())
+    emit("kernel_selective_scan_interpret", us_k, f"max_err_vs_ref={err:.2e}")
+    emit("kernel_selective_scan_ref", us_r, "oracle")
+    note("interpret mode prices correctness, not TPU speed; see "
+         "EXPERIMENTS.md roofline for the compiled-path analysis")
+
+
+BENCHES = {
+    "incoherence": bench_incoherence,
+    "balance_mfu": bench_balance_mfu,
+    "algorithms": bench_algorithms,
+    "comm_volume": bench_comm_volume,
+    "overhead": bench_overhead,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        note(f"=== {name} ===")
+        fn(quick=args.quick)
+    note(f"total wall time {time.time() - t0:.1f}s; {len(ROWS)} rows")
+
+
+if __name__ == "__main__":
+    main()

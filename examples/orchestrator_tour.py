@@ -1,0 +1,57 @@
+"""A guided tour of the paper's machinery, numerically.
+
+Walks one iteration of the MLLM Global Orchestrator on a skewed batch
+and prints every intermediate the paper defines: per-phase costs before
+and after post-balancing, the rearrangements, the composed plan
+(Pi_M o Pi_E^-1), communicator volumes (Eq. 3 vs 4), and the node-wise
+rearrangement's inter-node reduction (Eq. 5).
+
+    PYTHONPATH=src python examples/orchestrator_tour.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cost_model import CostModel
+from repro.core.orchestrator import MLLMGlobalOrchestrator, llm_cost_model
+from repro.data.synthetic import sample_examples
+
+
+def main():
+    cfg = get_config("mllm_10b")
+    d, c = 16, 4  # 16 DP instances, 4 per node
+    rng = np.random.default_rng(7)
+    examples = [sample_examples(rng, 8) for _ in range(d)]
+
+    print("=" * 72)
+    print("1. Modality Composition Incoherence (paper S3.1)")
+    for i in (0, 1):
+        ratios = [
+            f"{ex.task}:{ex.vision_meta}v/{ex.audio_meta}a/{ex.text_len}t"
+            for ex in examples[i][:4]
+        ]
+        print(f"   instance {i}: {ratios}")
+
+    for balance in (False, True):
+        orch = MLLMGlobalOrchestrator(cfg, d, balance=balance,
+                                      instances_per_node=c, vocab=512)
+        caps = orch.default_capacities(examples, margin=3.0)
+        _, rep = orch.plan_and_pack(examples, caps, rng)
+        tag = "post-balanced" if balance else "as-sampled   "
+        print("=" * 72)
+        print(f"2. {tag}: per-phase cost spread (f from Eq. 2)")
+        for ph, costs in rep.phase_costs.items():
+            print(f"   {ph:8s} max={costs.max():9.3g} mean={costs.mean():9.3g} "
+                  f"util={rep.phase_utilization[ph]:.3f}")
+        if balance:
+            print("3. composed communicator volumes (Pi_M o Pi_E^-1, S6)")
+            for mod, v in rep.comm_volume.items():
+                print(f"   {mod:8s} total={v['total']:8d} tokens, "
+                      f"stay-local={v['self']:6d}, "
+                      f"inter-node max={rep.internode_volume[mod]:6d} "
+                      f"(node-wise ILP applied)")
+            print(f"4. dispatcher solve time: {rep.solve_ms:.1f} ms "
+                  f"(overlapped with forward pass per S6)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: post-balanced multimodal training in ~60 lines.
+
+Builds a tiny LLaVA-family model, runs the MLLM Global Orchestrator on
+synthetic multimodal batches (with Modality Composition Incoherence),
+and takes a few optimizer steps -- loss should drop.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.orchestrator import MLLMGlobalOrchestrator
+from repro.data.synthetic import Example
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def sample(rng, per):
+    """CPU-sized multimodal examples (the full-scale distribution lives
+    in repro.data.synthetic; a smoke model wants smoke-sized lengths)."""
+    out = []
+    for _ in range(per):
+        if rng.random() < 0.6:
+            out.append(Example("vqa", int(rng.integers(8, 48)),
+                               int(rng.integers(1, 4)) * 16, 0,
+                               ("vision", "text")))
+        else:
+            out.append(Example("text", int(rng.integers(8, 96)), 0, 0, ("text",)))
+    return out
+
+
+def main():
+    cfg = get_config("llava_next_mistral_7b").smoke()
+    d = 4  # DP instances (the post-balancing width)
+    rng = np.random.default_rng(0)
+    orch = MLLMGlobalOrchestrator(cfg, d, vocab=cfg.vocab_size)
+
+    # Sample per-instance mini-batches the way a real loader would --
+    # independently per instance (batching randomness, paper S2.3).
+    first = [sample(rng, 4) for _ in range(d)]
+    caps = orch.default_capacities(first, margin=3.0)
+
+    params, opt_state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=3e-3)))
+
+    losses = []
+    for it in range(8):
+        examples = first if it == 0 else [sample(rng, 4) for _ in range(d)]
+        batch_np, report = orch.plan_and_pack(examples, caps, rng)
+        batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        print(f"step {it}: loss={losses[-1]:.4f} "
+              f"util(llm)={report.phase_utilization['llm']:.2f} "
+              f"util(vision)={report.phase_utilization['vision']:.2f} "
+              f"solve={report.solve_ms:.1f}ms")
+    assert losses[-1] < losses[0], "loss did not decrease"
+    print("OK: loss decreased under post-balanced training")
+
+
+if __name__ == "__main__":
+    main()

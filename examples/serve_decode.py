@@ -1,0 +1,54 @@
+"""Serving example: batched single-token decode with per-family caches.
+
+Decodes a batch of requests for three different architecture families
+(dense+SWA ring buffer, SSM constant state, hybrid) to show the
+serve_step contract the decode_32k / long_500k dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.serving.serve_step import init_cache, make_serve_step
+from repro.training.train_step import init_train_state
+
+
+def run(arch: str, batch: int = 4, prompt_len: int = 12, new_tokens: int = 16):
+    cfg = get_config(arch).smoke()
+    params, _ = init_train_state(cfg, jax.random.PRNGKey(0))
+    cache = init_cache(cfg, batch, 128)
+    if cfg.family == "audio":
+        cache["cross_seg"] = cache["cross_seg"].at[:, :8].set(1)
+    serve = jax.jit(make_serve_step(cfg))
+
+    # "Prefill" by decoding the prompt token by token (keeps the example
+    # dependent only on serve_step; batch prefill is the prefill_32k path).
+    rng = jax.random.PRNGKey(1)
+    prompt = jax.random.randint(rng, (batch, prompt_len), 1, cfg.vocab_size)
+    tok = prompt[:, :1]
+    t0 = time.time()
+    out = []
+    for t in range(prompt_len + new_tokens):
+        nxt, logits, cache = serve(params, tok, cache, jnp.int32(t))
+        tok = prompt[:, t + 1 : t + 2] if t + 1 < prompt_len else nxt
+        if t >= prompt_len:
+            out.append(nxt[:, 0])
+    toks = jnp.stack(out, axis=1)
+    dt = time.time() - t0
+    print(f"{arch:24s} [{cfg.family:6s}] generated {toks.shape} tokens in "
+          f"{dt:.2f}s ({batch * new_tokens / dt:.1f} tok/s); "
+          f"sample={toks[0, :8].tolist()}")
+
+
+def main():
+    for arch in ("h2o_danube_3_4b", "falcon_mamba_7b", "zamba2_2_7b",
+                 "whisper_large_v3"):
+        run(arch)
+    print("OK: all families decode with their native cache types")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""End-to-end driver: train a ~100M-param multimodal model for a few
+hundred steps with the full production stack -- prefetching loader with
+overlapped dispatcher computation, MLLM Global Orchestrator, post-
+balanced packed batches, AdamW, cosine schedule.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+
+On this CPU container a step takes a few seconds; pass --steps 20 for a
+quick check.  (On TPU the same script runs under the production mesh via
+repro.launch.train.)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.orchestrator import MLLMGlobalOrchestrator
+from repro.data.pipeline import PrefetchingLoader
+from repro.data.synthetic import Example
+from repro.training.optimizer import AdamWConfig, cosine_schedule
+from repro.training.train_step import init_train_state, make_loss_fn
+from repro.training.optimizer import adamw_update
+
+
+def build_cfg():
+    """~100M-param LLaVA-family config that still trains on CPU."""
+    base = get_config("llava_next_mistral_7b")
+    enc = tuple(dataclasses.replace(e, embed_dim=256, tokens_per_example_max=128)
+                for e in base.encoders)
+    return dataclasses.replace(
+        base, n_layers=12, d_model=640, n_heads=8, n_kv_heads=4, d_ff=1792,
+        vocab_size=32000, encoders=enc, block_q=128, block_kv=128,
+        name="llava-100m",
+    )
+
+
+def sampler(rng, per):
+    out = []
+    for _ in range(per):
+        if rng.random() < 0.5:
+            tiles = int(rng.integers(1, 4))
+            out.append(Example("vqa", int(rng.integers(16, 96)), tiles * 32, 0,
+                               ("vision", "text")))
+        else:
+            out.append(Example("text", int(rng.integers(16, 160)), 0, 0, ("text",)))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d", type=int, default=4)
+    ap.add_argument("--per", type=int, default=6)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = build_cfg()
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}  params~{n_params/1e6:.0f}M")
+
+    orch = MLLMGlobalOrchestrator(cfg, args.d, vocab=cfg.vocab_size)
+    probe = [sampler(np.random.default_rng(s), args.per) for s in range(args.d)]
+    caps = orch.default_capacities(probe, margin=3.0)
+    loader = PrefetchingLoader(orch, caps, examples_per_instance=args.per,
+                               sampler=sampler, depth=2)
+
+    params, opt_state = init_train_state(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=args.lr)
+    loss_fn = make_loss_fn(cfg)
+
+    @jax.jit
+    def step(params, opt_state, batch, lr):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg,
+                                             lr=lr)
+        return params, opt_state, {**metrics, **om}
+
+    t0 = time.time()
+    ema = None
+    try:
+        for it in range(args.steps):
+            batch_np, report, fetch_ms = next(loader)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            lr = cosine_schedule(it, peak_lr=args.lr, warmup=20, total=args.steps)
+            params, opt_state, m = step(params, opt_state, batch, lr)
+            loss = float(m["loss"])
+            ema = loss if ema is None else 0.9 * ema + 0.1 * loss
+            if it % 10 == 0 or it == args.steps - 1:
+                print(f"step {it:4d} loss={loss:.4f} ema={ema:.4f} "
+                      f"gnorm={float(m['grad_norm']):.2f} "
+                      f"util={report.phase_utilization['llm']:.2f} "
+                      f"tok={int(m['tokens'])} "
+                      f"{(time.time()-t0)/(it+1):.2f}s/step", flush=True)
+    finally:
+        stats = loader.overlap_stats()
+        loader.close()
+    print(f"done: final ema loss {ema:.4f}; dispatcher solve "
+          f"{stats['mean_solve_ms']:.1f}ms/batch fully overlapped with compute")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.configs.base import EncoderConfig, ModelConfig
+from repro.configs.registry import (
+    ARCHITECTURES,
+    INPUT_SHAPES,
+    get_config,
+    input_specs,
+    step_kind,
+)
+
+__all__ = [
+    "ARCHITECTURES", "INPUT_SHAPES", "EncoderConfig", "ModelConfig",
+    "get_config", "input_specs", "step_kind",
+]

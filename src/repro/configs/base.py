@@ -1,0 +1,202 @@
+"""Config schema for every architecture in the zoo.
+
+A model is described declaratively; ``repro.models.model.build_model``
+turns a :class:`ModelConfig` into init/apply functions.  All assigned
+architectures (10) plus the paper's own MLLM-10B/18B/84B (Table 1) are
+expressed in this schema -- see the sibling ``<arch>.py`` modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = ["EncoderConfig", "ModelConfig"]
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """A modality encoder submodule (paper S2.1).
+
+    For assigned [vlm]/[audio] archs the *frontend* (ViT / mel+conv) is a
+    stub -- ``input_specs()`` supplies precomputed patch/frame embeddings
+    of shape [tokens, embed_dim]; the transformer below (n_layers may be
+    0 for pure-stub connectors like LLaVA's) plus the MLP connector is
+    real and is a balancing *phase* of its own.
+    """
+
+    name: str  # "vision" | "audio"
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    embed_dim: int  # incoming stub embedding dim
+    downsample: int = 1  # paper S8: downsample before the connector
+    padded: bool = False  # paper: audio batches WITH padding (conv arch)
+    conv_attention: bool = False  # App. A cost model for conv-transformers
+    tokens_per_example_max: int = 2048
+    scan_unroll: int = 1  # roofline probes (see ModelConfig.scan_unroll)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None  # default d_model // n_heads
+
+    # Attention variants.
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False  # qwen3
+    sliding_window: int | None = None  # h2o-danube SWA
+    nonparametric_norm: bool = False  # olmo-1b
+    tie_embeddings: bool = False
+
+    # MoE.
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba).
+    ssm_variant: Literal["mamba1", "mamba2", None] = None
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_headdim: int = 64  # mamba2
+
+    # Hybrid (zamba2): a shared attention block every `shared_attn_every`
+    # SSM layers, reusing ONE set of attention weights each time.
+    shared_attn_every: int = 0
+
+    # Encoder-decoder (whisper): n_layers counts DECODER layers;
+    # cross-attention in every decoder layer.
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+
+    # Multimodal encoders (paper S2.1 submodules).
+    encoders: tuple[EncoderConfig, ...] = ()
+
+    # Numerics / implementation.
+    dtype: str = "bfloat16"
+    # "chunked_unrolled" = roofline mode: inner scans (attention KV
+    # blocks, xent chunks) unroll so cost_analysis counts every
+    # iteration (XLA prices a while-loop body once).
+    attention_impl: Literal["reference", "chunked", "chunked_unrolled"] = "chunked"
+    block_q: int = 512
+    block_kv: int = 512
+    # Beyond-paper: window-chunked segment attention.  When set (to the
+    # max example/segment length), self-attention over packed streams
+    # computes [W x 2W] windows instead of [T x T] -- exact because
+    # post-balanced segments never exceed W.  None = paper-faithful.
+    segment_window: int | None = None
+    # Beyond-paper: explicit sharding constraint on the MoE dispatch
+    # buffers ([E, C, d] capacity dim over the model axis) -- a S-Perf
+    # knob against collective-bound MoE steps.
+    moe_shard_buffers: bool = False
+    remat: bool = True
+    # Layer-scan unroll factor; the dry-run compiles at 1 and 2 (3 for
+    # hybrids) and extrapolates exact per-layer FLOPs/bytes/collectives.
+    scan_unroll: int = 1
+    citation: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def param_count(self) -> int:
+        """Total parameters N (for MODEL_FLOPS = 6*N*D roofline term)."""
+        return _param_count(self)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        return _param_count(self, active_only=True)
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced variant of the same family: <=2 layers, d_model<=256,
+        <=4 experts -- runs one forward/train step on CPU."""
+        enc = tuple(
+            dataclasses.replace(
+                e, n_layers=min(e.n_layers, 2), d_model=128, n_heads=2,
+                d_ff=256, embed_dim=64, tokens_per_example_max=64,
+            )
+            for e in self.encoders
+        )
+        return dataclasses.replace(
+            self,
+            n_layers=2,
+            encoder_layers=min(self.encoder_layers, 2),
+            d_model=256 if not self.ssm_variant else 128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=None,
+            d_ff=512,
+            vocab_size=512,
+            n_experts=min(self.n_experts, 4),
+            experts_per_token=min(self.experts_per_token, 2),
+            ssm_headdim=32 if self.ssm_variant == "mamba2" else self.ssm_headdim,
+            ssm_state=min(self.ssm_state, 16) or self.ssm_state,
+            sliding_window=64 if self.sliding_window else None,
+            shared_attn_every=2 if self.shared_attn_every else 0,
+            block_q=64,
+            block_kv=64,
+            encoders=enc,
+            name=self.name + "-smoke",
+        )
+
+
+def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim_
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    total = cfg.vocab_size * d  # embed
+    if not cfg.tie_embeddings:
+        total += d * cfg.vocab_size  # lm head
+
+    def attn_params() -> int:
+        return d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+
+    def mlp_params() -> int:
+        return 3 * d * f  # swiglu
+
+    def mamba_params() -> int:
+        di = cfg.d_inner
+        n = cfg.ssm_state
+        if cfg.ssm_variant == "mamba2":
+            nheads = di // cfg.ssm_headdim
+            return d * (2 * di + 2 * n + nheads) + di * d + di * cfg.ssm_conv
+        # mamba1: in_proj 2*di, x_proj di->(dt_rank+2n), dt_proj, out_proj, A, D, conv
+        dt_rank = max(1, d // 16)
+        return (
+            d * 2 * di + di * (dt_rank + 2 * n) + dt_rank * di + di * d
+            + di * n + di + di * cfg.ssm_conv
+        )
+
+    if cfg.family in ("dense", "vlm"):
+        total += cfg.n_layers * (attn_params() + mlp_params())
+    elif cfg.family == "moe":
+        e_count = cfg.experts_per_token if active_only else cfg.n_experts
+        total += cfg.n_layers * (attn_params() + e_count * mlp_params() + d * cfg.n_experts)
+    elif cfg.family == "ssm":
+        total += cfg.n_layers * mamba_params()
+    elif cfg.family == "hybrid":
+        total += cfg.n_layers * mamba_params()
+        if cfg.shared_attn_every:
+            total += attn_params() + mlp_params()  # ONE shared block
+    elif cfg.family == "audio":
+        total += cfg.n_layers * (2 * attn_params() + mlp_params())  # dec: self+cross
+        total += cfg.encoder_layers * (attn_params() + mlp_params())
+    for e in cfg.encoders:
+        ed, ef = e.d_model, e.d_ff
+        per = 4 * ed * ed + 3 * ed * ef
+        total += e.n_layers * per + e.embed_dim * ed + ed * d  # + connector
+    return total

@@ -1,0 +1,34 @@
+"""llava-next-mistral-7b: VLM, anyres tiling [hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+The vision tower (CLIP ViT-L/14) + projector frontend is a STUB per the
+assignment carve-out: input_specs() provides precomputed patch
+embeddings (1024-dim); the MLP connector into the 4096-dim LLM space and
+the Mistral-7B backbone are real.  AnyRes tiling makes image token
+counts vary wildly per example -- exactly the Modality Composition
+Incoherence case the paper targets."""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    rope_theta=1e6,
+    encoders=(
+        EncoderConfig(
+            name="vision",
+            n_layers=0,          # frontend stub: embeddings arrive projected
+            d_model=1024,
+            n_heads=16,
+            d_ff=4096,
+            embed_dim=1024,
+            downsample=1,
+            tokens_per_example_max=2880,  # anyres: up to 5 tiles x 576
+        ),
+    ),
+    citation="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

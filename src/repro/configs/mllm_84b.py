@@ -1,0 +1,22 @@
+"""Paper Table 1 MLLM-84B: 72B LLM + ViT-6B + Whisper-6B."""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mllm-84b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    encoders=(
+        EncoderConfig(name="vision", n_layers=45, d_model=3200, n_heads=25,
+                      d_ff=12800, embed_dim=1176, downsample=4,
+                      tokens_per_example_max=4096),  # 896/14 = 64x64
+        EncoderConfig(name="audio", n_layers=48, d_model=3072, n_heads=24,
+                      d_ff=12288, embed_dim=1280, downsample=4, padded=True,
+                      conv_attention=True, tokens_per_example_max=1500),
+    ),
+    citation="OrchMLLM Table 1 (MLLM-84B)",
+)

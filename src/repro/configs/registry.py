@@ -1,0 +1,220 @@
+"""Architecture registry + assigned input shapes + input_specs().
+
+``get_config(name)`` resolves ``--arch <id>``.  ``input_specs(cfg,
+shape_name, mesh_info)`` builds ShapeDtypeStruct stand-ins for every
+model input of the (architecture x input-shape) pair -- weak-type
+correct, shardable, no device allocation (dry-run contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["ARCHITECTURES", "INPUT_SHAPES", "get_config", "input_specs", "step_kind"]
+
+ARCHITECTURES = (
+    "falcon_mamba_7b",
+    "grok_1_314b",
+    "h2o_danube_3_4b",
+    "llava_next_mistral_7b",
+    "qwen3_8b",
+    "olmo_1b",
+    "whisper_large_v3",
+    "zamba2_2_7b",
+    "granite_moe_3b_a800m",
+    "starcoder2_15b",
+    # The paper's own models (Table 1):
+    "mllm_10b",
+    "mllm_18b",
+    "mllm_84b",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention (see DESIGN.md S4): SSM, hybrid,
+# and native-SWA dense only.
+LONG_CONTEXT_OK = {"falcon_mamba_7b", "zamba2_2_7b", "h2o_danube_3_4b"}
+
+
+def get_config(name: str) -> ModelConfig:
+    name = name.replace("-", "_")
+    if name not in ARCHITECTURES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCHITECTURES}")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def step_kind(cfg: ModelConfig, shape: InputShape) -> str | None:
+    """Which step this pair lowers; None = skipped (DESIGN.md S4)."""
+    key = cfg.name.replace("-", "_").replace(".", "_")
+    if shape.name == "long_500k" and key not in LONG_CONTEXT_OK:
+        return None
+    return shape.kind
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *, dp_shards: int) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch x input shape) pair.
+
+    ``dp_shards`` = product of the DP mesh axes (pod*data); every leading
+    dim is a multiple of it so the arrays shard cleanly.
+    """
+    shp = INPUT_SHAPES[shape_name]
+    kind = step_kind(cfg, shp)
+    if kind is None:
+        raise ValueError(f"{cfg.name} skips {shape_name} (see DESIGN.md)")
+    i32, f32 = jnp.int32, jnp.bfloat16
+
+    if kind in ("train", "prefill"):
+        # Per-shard packed stream capacity: global tokens / shards.
+        total_tokens = shp.seq_len * shp.global_batch
+        cap = max(total_tokens // dp_shards, shp.seq_len)
+        S = dp_shards
+        if cfg.encoders and cfg.family != "audio":
+            return _mm_specs(cfg, S, cap, i32, f32)
+        if cfg.family == "audio":
+            return _encdec_specs(cfg, S, cap, i32, f32)
+        return {
+            "tokens": _sds((S, cap), i32),
+            "labels": _sds((S, cap), i32),
+            "seg": _sds((S, cap), i32),
+            "pos": _sds((S, cap), i32),
+        }
+
+    # decode: one new token per request, KV/SSM state at seq_len.  When
+    # B < dp_shards (long_500k), the cache shards over its seq/feature
+    # dims instead of batch (see repro.sharding.specs).
+    B = shp.global_batch
+    return {
+        "tokens": _sds((B, 1), i32),
+        "t": _sds((), i32),
+        "cache": cache_specs(cfg, B, shp.seq_len),
+    }
+
+
+def _mm_specs(cfg, S, cap, i32, f32):
+    """VLM / paper-MLLM train batch: text + per-encoder streams + plan."""
+    specs = {
+        "tokens": _sds((S, cap // 2), i32),
+        "text_dst": _sds((S, cap // 2), i32),
+        "llm_seg": _sds((S, cap), i32),
+        "llm_pos": _sds((S, cap), i32),
+        "llm_labels": _sds((S, cap), i32),
+    }
+    for e in cfg.encoders:
+        cap_e = _round_up(cap // 2, e.downsample * 128)
+        cap_eo = cap_e // e.downsample
+        specs.update({
+            f"enc_{e.name}_embeds": _sds((S, cap_e, e.embed_dim), f32),
+            f"enc_{e.name}_seg": _sds((S, cap_e), i32),
+            f"enc_{e.name}_pos": _sds((S, cap_e), i32),
+            f"enc_{e.name}_dst": _sds((S, cap_eo), i32),
+            **_plan_specs(e.name, S, cap_eo, i32),
+        })
+    return specs
+
+
+def _encdec_specs(cfg, S, cap, i32, f32):
+    e = cfg.encoders[0]
+    cap_e = _round_up(cap, e.downsample * 128)
+    cap_eo = cap_e  # encoder output stream stays per-shard, same capacity
+    return {
+        "tokens": _sds((S, cap), i32),
+        "labels": _sds((S, cap), i32),
+        "seg": _sds((S, cap), i32),
+        "pos": _sds((S, cap), i32),
+        f"enc_{e.name}_embeds": _sds((S, cap_e, e.embed_dim), f32),
+        f"enc_{e.name}_seg": _sds((S, cap_e), i32),
+        f"enc_{e.name}_pos": _sds((S, cap_e), i32),
+        f"enc_{e.name}_seg_out": _sds((S, cap_eo), i32),
+        f"enc_{e.name}_pos_out": _sds((S, cap_eo), i32),
+        **_plan_specs(e.name, S, cap_eo, i32),
+    }
+
+
+def _plan_specs(name, S, cap_out, i32):
+    """Communicator plan arrays (dense-a2a mode) as specs.
+
+    chunk_cap is a static capacity; we size it at cap_out//S rounded up
+    (balanced plans send ~1/S of a shard's tokens to each peer)."""
+    chunk = _round_up(max(cap_out // S, 8), 8)
+    return {
+        f"enc_{name}_plan_pre_gather_dense": _sds((S, S * chunk), i32),
+        f"enc_{name}_plan_post_gather_dense": _sds((S, cap_out), i32),
+        f"enc_{name}_plan_post_mask": _sds((S, cap_out), jnp.bool_),
+        f"enc_{name}_plan_global_gather": _sds((S, cap_out), i32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, B: int, seq_len: int):
+    """Decode-state specs per family (full KV / SWA ring / SSM state)."""
+    f32 = jnp.float32
+    bf16 = jnp.bfloat16
+    hd, Hkv, L = cfg.head_dim_, cfg.n_kv_heads, cfg.n_layers
+
+    def attn_cache(n_layers, S):
+        return {
+            "k": _sds((n_layers, B, S, Hkv, hd), bf16),
+            "v": _sds((n_layers, B, S, Hkv, hd), bf16),
+            "kv_pos": _sds((B, S), jnp.int32),
+            "kv_seg": _sds((B, S), jnp.int32),
+        }
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        S = min(seq_len, cfg.sliding_window or seq_len)
+        return attn_cache(L, S)
+    if cfg.family == "ssm":
+        di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        return {
+            "conv": _sds((L, B, K - 1, di), bf16),
+            "h": _sds((L, B, di, N), f32),
+        }
+    if cfg.family == "hybrid":
+        di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        H = di // cfg.ssm_headdim
+        G = L // cfg.shared_attn_every
+        c = {
+            "conv": _sds((L, B, K - 1, di), bf16),
+            "h": _sds((L, B, H, cfg.ssm_headdim, N), f32),
+        }
+        sa = attn_cache(G, seq_len)  # zamba's shared attn sees full history
+        return {**c, **{f"sa_{k}": v for k, v in sa.items()}}
+    if cfg.family == "audio":
+        e = cfg.encoders[0]
+        enc_T = e.tokens_per_example_max
+        return {
+            **attn_cache(L, seq_len),
+            "cross_k": _sds((L, B, enc_T, Hkv, hd), bf16),
+            "cross_v": _sds((L, B, enc_T, Hkv, hd), bf16),
+            "cross_seg": _sds((B, enc_T), jnp.int32),
+            "cross_pos": _sds((B, enc_T), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

@@ -1,0 +1,36 @@
+"""whisper-large-v3: encoder-decoder ASR [arXiv:2212.04356].
+
+Mel-spectrogram + conv frontend is a STUB: input_specs() provides frame
+embeddings [T<=1500, 1280].  The 32-layer bidirectional encoder and the
+32-layer causal decoder with cross-attention are real.  Audio batches
+use PADDING (paper S8: 'audios are batched with paddings, due to the
+convolution architecture') -> the audio phase uses Alg 2 and the
+conv-attention cost model."""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,          # decoder layers
+    encoder_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    encoders=(
+        EncoderConfig(
+            name="audio",
+            n_layers=0,   # the encoder stack lives in the enc-dec model itself
+            d_model=1280,
+            n_heads=20,
+            d_ff=5120,
+            embed_dim=1280,
+            downsample=1,
+            padded=True,
+            conv_attention=True,
+            tokens_per_example_max=1500,
+        ),
+    ),
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,128 @@
+"""Cost models f(S) for Batch Post-Balancing (paper Eq. 1, Eq. 2, App. A).
+
+A *batch* here is a collection of example sequence lengths assigned to one
+DP instance for one phase.  The balancing objective is
+
+    minimize over rearrangements Pi of   max_i f(S'_i(Pi))
+
+where ``f`` models the compute (and, proportionally, memory) cost of the
+batch on its instance.  The paper gives:
+
+  Eq. (1)  batch length   L = b * max(l)      (padding)
+                          L = sum(l)          (no padding)
+
+  Eq. (2)  transformer    f = alpha*L + beta * L^2 / b          (padding)
+                          f = alpha*L + beta * sum(l_j^2)       (no padding)
+
+  App. A   conv-transformer (padded attention, unpadded batch):
+                          f = L + lambda * b * max(l)^2
+
+``alpha`` is the per-token linear cost (MLP + projections), ``beta`` the
+quadratic attention coefficient.  For an architecture with hidden size H,
+FFN size F, #layers N, per-token FLOPs scale like
+``alpha ~ N*(8H^2 + 4HF(+MoE top-k scaling))`` and per-pair attention
+FLOPs like ``beta ~ 4*N*H`` -- so ``beta/alpha ~ 1/(2H + F)``, i.e. the
+paper's beta << alpha assumption holds until sequence lengths approach
+the model width.  SSM (Mamba) layers have NO quadratic term (beta = 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "CostModel",
+    "batch_length",
+    "transformer_cost_coeffs",
+]
+
+
+def batch_length(lengths: Sequence[int] | np.ndarray, padding: bool) -> int:
+    """Paper Eq. (1): the batch length L of a mini-batch."""
+    arr = np.asarray(lengths, dtype=np.int64)
+    if arr.size == 0:
+        return 0
+    if padding:
+        return int(arr.size * arr.max())
+    return int(arr.sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """f(S) for one phase.
+
+    Attributes:
+      alpha: linear per-token coefficient.
+      beta: quadratic attention coefficient (0 for SSM phases).
+      padding: whether the phase batches with padding (paper: audio yes,
+        vision/LLM no).
+      conv_attention: App. A ConvTransformer objective -- attention is
+        computed on the *padded* length even though the batch is packed
+        (f = L + lambda*b*max(l)^2).  Mutually exclusive with `padding`.
+    """
+
+    alpha: float = 1.0
+    beta: float = 0.0
+    padding: bool = False
+    conv_attention: bool = False
+
+    @property
+    def lam(self) -> float:
+        return self.beta / self.alpha if self.alpha else 0.0
+
+    def cost(self, lengths: Sequence[int] | np.ndarray) -> float:
+        """f(S) per paper Eq. (2) / App. A."""
+        arr = np.asarray(lengths, dtype=np.float64)
+        if arr.size == 0:
+            return 0.0
+        b = arr.size
+        if self.conv_attention:
+            L = float(arr.sum())
+            return self.alpha * L + self.beta * b * float(arr.max()) ** 2
+        if self.padding:
+            L = b * float(arr.max())
+            return self.alpha * L + self.beta * (L * L) / b
+        L = float(arr.sum())
+        return self.alpha * L + self.beta * float((arr * arr).sum())
+
+    def costs(self, batches: Sequence[Sequence[int]]) -> np.ndarray:
+        return np.array([self.cost(b) for b in batches], dtype=np.float64)
+
+    def max_cost(self, batches: Sequence[Sequence[int]]) -> float:
+        c = self.costs(batches)
+        return float(c.max()) if c.size else 0.0
+
+    def utilization(self, batches: Sequence[Sequence[int]]) -> float:
+        """Simulated utilization = mean(f) / max(f).
+
+        Under synchronous DP every instance waits for the straggler, so a
+        batch set with cost vector c achieves mean(c)/max(c) of the
+        utilization a perfectly balanced set would.  This is the metric
+        the benchmarks report as 'simulated MFU fraction'.
+        """
+        c = self.costs(batches)
+        m = float(c.max()) if c.size else 0.0
+        return float(c.mean() / m) if m > 0 else 1.0
+
+
+def transformer_cost_coeffs(
+    hidden: int,
+    ffn: int,
+    n_layers: int,
+    *,
+    moe_experts_active: int = 1,
+    ssm: bool = False,
+) -> tuple[float, float]:
+    """Derive (alpha, beta) from an architecture (used by dispatchers).
+
+    alpha ~ per-token matmul FLOPs, beta ~ per-token-pair attention FLOPs.
+    Both are scaled so alpha is O(1) -- only the *ratio* matters for the
+    balancing objective.
+    """
+    lin = n_layers * (8.0 * hidden * hidden + 6.0 * hidden * ffn * moe_experts_active)
+    quad = 0.0 if ssm else 4.0 * n_layers * hidden
+    alpha = 1.0
+    beta = quad / lin
+    return alpha, beta

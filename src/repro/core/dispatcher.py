@@ -1,0 +1,131 @@
+"""Batch Post-Balancing Dispatcher (paper S5).
+
+The dispatcher is the per-phase unit that
+  1. collects sequence *lengths* from every DP instance (in torch this is
+     an All-Gather of scalars; under JAX's global-program model the host
+     pipeline already sees all lengths -- we keep the accounting so the
+     benchmarks can price the strawman vs. the paper's communicator),
+  2. runs the Post-Balancing algorithm selected by the balance policy,
+  3. optionally applies the Node-wise Rearrangement Algorithm,
+  4. emits a :class:`DispatchPlan` -- everything the device-side
+     communicator needs to perform the payload all-to-all with STATIC
+     shapes (per-shard token capacity), plus bookkeeping for
+     EXPERIMENTS.md-style accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.balancing import post_balance
+from repro.core.cost_model import CostModel
+from repro.core.nodewise import nodewise_rearrange
+from repro.core.rearrangement import Rearrangement, identity_rearrangement
+
+__all__ = ["DispatchPlan", "BatchPostBalancingDispatcher"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass
+class DispatchPlan:
+    """Host-side plan for one phase of one iteration.
+
+    The device-side communicator consumes the token-level arrays; the
+    orchestrator consumes ``pi`` for composition.
+    """
+
+    pi: Rearrangement
+    d: int
+    # Static per-shard token capacity for this phase (multiple of `pad_to`).
+    token_capacity: int
+    # Per destination shard: ordered example lengths (ragged).
+    dest_lengths: list[np.ndarray]
+    # Accounting:
+    costs: np.ndarray  # f(S'_i) per destination shard
+    utilization: float  # mean/max of costs
+    solve_ms: float  # dispatcher computation time (paper Table 2 analog)
+
+    @property
+    def max_cost(self) -> float:
+        return float(self.costs.max()) if self.costs.size else 0.0
+
+
+class BatchPostBalancingDispatcher:
+    """One dispatcher per phase (paper Fig. 4).
+
+    Args:
+      d: number of DP instances (= size of pod*data mesh axes).
+      cost_model: the phase's f.
+      algorithm: override the balance policy (see core.balancing).
+      instances_per_node: node size c for Node-wise Rearrangement; ``None``
+        disables the node-wise step (e.g. single-node microbenchmarks).
+      pad_to: round per-shard token capacity up to this multiple
+        (TPU lane alignment; 128 aligns the MXU).
+      balance: False -> identity plan (the paper's 'OrchMLLM w/o balance'
+        baseline).
+    """
+
+    def __init__(
+        self,
+        d: int,
+        cost_model: CostModel,
+        *,
+        algorithm: str | None = None,
+        instances_per_node: int | None = None,
+        nodewise_method: str = "auto",
+        within_node: bool = True,
+        pad_to: int = 128,
+        balance: bool = True,
+    ) -> None:
+        self.d = d
+        self.cost_model = cost_model
+        self.algorithm = algorithm
+        self.instances_per_node = instances_per_node
+        self.nodewise_method = nodewise_method
+        self.within_node = within_node
+        self.pad_to = pad_to
+        self.balance = balance
+
+    def plan(self, lengths_per_instance: Sequence[np.ndarray]) -> DispatchPlan:
+        t0 = time.perf_counter()
+        if self.balance:
+            pi = post_balance(
+                lengths_per_instance, self.d, self.cost_model, algorithm=self.algorithm
+            )
+            if self.instances_per_node and self.instances_per_node < self.d:
+                pi = nodewise_rearrange(
+                    pi,
+                    self.instances_per_node,
+                    method=self.nodewise_method,
+                    within_node=self.within_node,
+                )
+        else:
+            pi = identity_rearrangement(lengths_per_instance, self.d)
+        solve_ms = (time.perf_counter() - t0) * 1e3
+
+        dest_lengths = pi.dest_lengths()
+        if self.cost_model.padding or self.cost_model.conv_attention:
+            per_shard_tokens = [
+                int(l.size * l.max()) if l.size else 0 for l in dest_lengths
+            ]
+        else:
+            per_shard_tokens = [int(l.sum()) for l in dest_lengths]
+        cap = _round_up(max(per_shard_tokens, default=0) or self.pad_to, self.pad_to)
+        costs = np.array([self.cost_model.cost(l) for l in dest_lengths])
+        maxc = costs.max() if costs.size else 0.0
+        util = float(costs.mean() / maxc) if maxc > 0 else 1.0
+        return DispatchPlan(
+            pi=pi,
+            d=self.d,
+            token_capacity=cap,
+            dest_lengths=dest_lengths,
+            costs=costs,
+            utilization=util,
+            solve_ms=solve_ms,
+        )

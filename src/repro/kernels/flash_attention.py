@@ -1,0 +1,135 @@
+"""Segment-aware flash attention, Pallas TPU kernel.
+
+This is the TPU-native form of the packed-batch attention that
+post-balancing relies on (no-padding batching, paper Alg 1/3): the
+kernel masks by SEGMENT ID inside each tile, so one shard's stream can
+hold many examples with zero cross-contamination and zero padding
+FLOPs beyond tile granularity.
+
+Tiling: grid (B*H, nQ, nK) with the KV dimension innermost (sequential
+on TPU); VMEM scratch (m, l, acc) carries the online-softmax state
+across KV tiles -- the standard FlashAttention-2 schedule mapped onto
+the MXU: block_q x block_kv score tiles, 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0**30
+
+__all__ = ["flash_attention"]
+
+
+def _kernel(q_ref, k_ref, v_ref, qseg_ref, kseg_ref, qpos_ref, kpos_ref,
+            out_ref, m_scr, l_scr, acc_scr, *, causal, window, scale, n_kv):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # [bq, D]
+    k = k_ref[0].astype(jnp.float32)  # [bk, D]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [bq, bk]
+
+    qs = qseg_ref[0]
+    ks = kseg_ref[0]
+    qp = qpos_ref[0]
+    kp = kpos_ref[0]
+    mask = (qs[:, None] == ks[None, :]) & (qs[:, None] > 0)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        mask &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    # Masked entries contribute exactly zero (fully-masked rows would
+    # otherwise see exp(NEG_INF - NEG_INF) = 1).
+    p = jnp.exp(s - m_new[:, None]) * mask.astype(jnp.float32)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        out_ref[0, ...] = (acc_scr[...] / l[:, None]).astype(out_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_seg: jnp.ndarray,
+    kv_seg: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q [B,H,Tq,D]; k,v [B,H,Tkv,D]; seg/pos [B,T*] int32.
+
+    ``interpret=True`` runs the kernel body in Python on CPU (the
+    validation mode for this container); on real TPU pass False.
+    """
+    B, H, Tq, D = q.shape
+    Tkv = k.shape[2]
+    bq = min(block_q, Tq)
+    bk = min(block_kv, Tkv)
+    if Tq % bq or Tkv % bk:
+        raise ValueError(f"T ({Tq},{Tkv}) must be divisible by blocks ({bq},{bk})")
+    n_q, n_kv = Tq // bq, Tkv // bk
+    scale = 1.0 / np.sqrt(D)
+
+    qf = q.reshape(B * H, Tq, D)
+    kf = k.reshape(B * H, Tkv, D)
+    vf = v.reshape(B * H, Tkv, D)
+
+    grid = (B * H, n_q, n_kv)
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, scale=scale, n_kv=n_kv
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, bq), lambda b, iq, ik, H=H: (b // H, iq)),
+            pl.BlockSpec((1, bk), lambda b, iq, ik, H=H: (b // H, ik)),
+            pl.BlockSpec((1, bq), lambda b, iq, ik, H=H: (b // H, iq)),
+            pl.BlockSpec((1, bk), lambda b, iq, ik, H=H: (b // H, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # running denom l
+            pltpu.VMEM((bq, D), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, q_seg, kv_seg, q_pos, kv_pos)
+    return out.reshape(B, H, Tq, D)

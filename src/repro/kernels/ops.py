@@ -1,0 +1,44 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (Python
+execution of the kernel body -- the correctness-validation mode); on a
+real TPU set ``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to
+compile to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.selective_scan import selective_scan as _scan
+
+__all__ = ["flash_attention_op", "selective_scan_op", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
+                                   "interpret"))
+def flash_attention_op(q, k, v, q_seg, kv_seg, q_pos, kv_pos, *,
+                       causal=True, window=None, block_q=128, block_kv=128,
+                       interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, q_seg, kv_seg, q_pos, kv_pos, causal=causal,
+                  window=window, block_q=block_q, block_kv=block_kv,
+                  interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def selective_scan_op(u, delta, A, B, C, D, seg, *, block_d=128, chunk=64,
+                      interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _scan(u, delta, A, B, C, D, seg, block_d=block_d, chunk=chunk,
+                 interpret=interpret)

@@ -1,0 +1,103 @@
+"""Mamba-1 selective scan, Pallas TPU kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of warp-level
+parallel prefix, we tile the CHANNEL dimension across the grid (each
+channel block is an independent recurrence -> trivially parallel across
+TPU cores) and walk TIME in VMEM-resident chunks, carrying the [bd, N]
+state in scratch across sequential grid steps.  Segment-aware: the
+state resets where the segment id changes (packed post-balanced
+streams).
+
+Grid: (n_channel_blocks, n_time_chunks) -- time innermost (sequential
+on TPU), channels outer (parallelizable).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["selective_scan"]
+
+
+def _kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, keep_ref, y_ref,
+            h_scr, *, chunk):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    u = u_ref[...].astype(jnp.float32)      # [ct, bd]
+    dt = dt_ref[...].astype(jnp.float32)    # [ct, bd]
+    A = A_ref[...].astype(jnp.float32)      # [bd, N]
+    Bm = B_ref[...].astype(jnp.float32)     # [ct, N]
+    Cm = C_ref[...].astype(jnp.float32)     # [ct, N]
+    Dv = D_ref[...].astype(jnp.float32)     # [1, bd]
+    keep = keep_ref[...]                    # [ct, 1] int32 (bool as int)
+
+    def step(t, carry):
+        h, ys = carry
+        dA = jnp.exp(dt[t][:, None] * A)  # [bd, N]
+        h = jnp.where(keep[t, 0] > 0, h, 0.0) * dA + (
+            (dt[t] * u[t])[:, None] * Bm[t][None, :]
+        )
+        y = (h * Cm[t][None, :]).sum(axis=1) + Dv[0] * u[t]
+        return h, ys.at[t].set(y)
+
+    ys0 = jnp.zeros(u.shape, jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h_scr[...], ys0))
+    h_scr[...] = h
+    y_ref[...] = ys.astype(y_ref.dtype)
+
+
+def selective_scan(
+    u: jnp.ndarray,
+    delta: jnp.ndarray,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    D: jnp.ndarray,
+    seg: jnp.ndarray,
+    *,
+    block_d: int = 128,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """u, delta [T, di]; A [di, N]; B, C [T, N]; D [di]; seg [T] int32.
+    Returns y [T, di]."""
+    T, di = u.shape
+    N = A.shape[1]
+    bd = min(block_d, di)
+    ct = min(chunk, T)
+    if di % bd or T % ct:
+        raise ValueError(f"di={di} % {bd} or T={T} % {ct} != 0")
+    n_d, n_t = di // bd, T // ct
+
+    prev = jnp.concatenate([seg[:1], seg[:-1]])
+    keep = ((seg > 0) & (seg == prev)).at[0].set(False)
+    keep = keep.astype(jnp.int32)[:, None]  # [T, 1]
+    D2 = D[None, :]  # [1, di]
+
+    kernel = functools.partial(_kernel, chunk=ct)
+    y = pl.pallas_call(
+        kernel,
+        grid=(n_d, n_t),
+        in_specs=[
+            pl.BlockSpec((ct, bd), lambda id_, it: (it, id_)),   # u
+            pl.BlockSpec((ct, bd), lambda id_, it: (it, id_)),   # delta
+            pl.BlockSpec((bd, N), lambda id_, it: (id_, 0)),     # A
+            pl.BlockSpec((ct, N), lambda id_, it: (it, 0)),      # B
+            pl.BlockSpec((ct, N), lambda id_, it: (it, 0)),      # C
+            pl.BlockSpec((1, bd), lambda id_, it: (0, id_)),     # D
+            pl.BlockSpec((ct, 1), lambda id_, it: (it, 0)),      # keep
+        ],
+        out_specs=pl.BlockSpec((ct, bd), lambda id_, it: (it, id_)),
+        out_shape=jax.ShapeDtypeStruct((T, di), u.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(u, delta, A, B, C, D2, keep)
+    return y

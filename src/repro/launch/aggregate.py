@@ -1,0 +1,92 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m repro.launch.aggregate experiments/dryrun
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def gb(x):
+    return f"{x / 2**30:.2f}" if x is not None else "-"
+
+
+def load(out_dir: Path):
+    rows = []
+    for f in sorted(out_dir.glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def roofline_table(rows) -> str:
+    lines = [
+        "| arch | shape | kind | compute | memory | collective | dominant | "
+        "HBM GiB (args+tmp) | useful ratio | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != "16x16":
+            continue
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | - | "
+                f"skipped: {r['reason']} |")
+            continue
+        if r["status"] == "FAILED":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | - | "
+                f"FAILED: {r['error'][:80]} |")
+            continue
+        mem = r["memory_per_device"]
+        hbm = (mem.get("argument_size") or 0) + (mem.get("temp_size") or 0)
+        note = "fits" if hbm < 16 * 2**30 else "OVER 16G HBM"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{r['dominant']}** | "
+            f"{hbm / 2**30:.2f} | {r['useful_ratio']:.3f} | {note} |")
+    return "\n".join(lines)
+
+
+def multipod_table(rows) -> str:
+    lines = ["| arch | shape | 2x16x16 status | compile_s |",
+             "|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != "2x16x16":
+            continue
+        st = r["status"]
+        extra = r.get("compile_s", "-") if st == "ok" else r.get(
+            "reason", r.get("error", ""))[:60]
+        lines.append(f"| {r['arch']} | {r['shape']} | {st} | {extra} |")
+    return "\n".join(lines)
+
+
+def summarize(rows) -> str:
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skipped")
+    bad = sum(1 for r in rows if r["status"] == "FAILED")
+    return f"{ok} ok / {sk} skipped / {bad} failed of {len(rows)}"
+
+
+def main():
+    out = Path(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    rows = load(out)
+    print("## Roofline (single pod 16x16, per chip)\n")
+    print(roofline_table(rows))
+    print("\n## Multi-pod (2x16x16) compile check\n")
+    print(multipod_table(rows))
+    print(f"\nTotals: {summarize(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production mesh construction (dry-run contract).
+
+``make_production_mesh`` is a FUNCTION, not a module constant, so
+importing this module never touches JAX device state.  The dry-run
+entrypoint (launch/dryrun.py) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any JAX
+import; everything else sees the real device count.
+
+Single pod (TPU v5e-256): mesh (16, 16) over ("data", "model").
+Two pods (512 chips):      mesh (2, 16, 16) over ("pod", "data", "model").
+
+DP shards for the Batch Post-Balancing problem = product of the
+("pod","data") axes; the node-wise ILP groups them by pod (ICI vs DCI =
+the paper's NVLink vs InfiniBand split).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "dp_axes_of", "dp_shards_of"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_shards_of(mesh) -> int:
+    n = 1
+    for a in dp_axes_of(mesh):
+        n *= mesh.shape[a]
+    return n

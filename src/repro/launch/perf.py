@@ -1,0 +1,128 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""S-Perf hillclimb driver (EXPERIMENTS.md).
+
+Re-lowers a chosen (arch x shape) pair with one optimization knob
+changed and reports the delta on every roofline term vs the cached
+baseline.  Experiments are named; each run writes
+experiments/perf/<pair>__<variant>.json.
+
+    PYTHONPATH=src python -m repro.launch.perf --exp qwen3_windowed
+    PYTHONPATH=src python -m repro.launch.perf --list
+"""
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.launch.dryrun import run_pair
+
+
+def _variant(cfg, **kw):
+    enc_kw = kw.pop("encoders_map", None)
+    if enc_kw:
+        kw["encoders"] = tuple(dataclasses.replace(e, **enc_kw) for e in cfg.encoders)
+    return dataclasses.replace(cfg, **kw)
+
+
+# Each experiment: (arch, shape, {variant_name: cfg_kwargs_or_run_kwargs}).
+EXPERIMENTS = {
+    # 1. memory-dominant dense train: window-chunked segment attention
+    #    (exploits post-balancing's bounded segment length).
+    "qwen3_windowed": ("qwen3_8b", "train_4k", {
+        "segwin4096": dict(cfg=dict(segment_window=4096)),
+        "segwin4096_bq256": dict(cfg=dict(segment_window=4096, block_q=256,
+                                          block_kv=256)),
+    }),
+    "h2o_windowed": ("h2o_danube_3_4b", "train_4k", {
+        "segwin4096": dict(cfg=dict(segment_window=4096)),
+    }),
+    # 2. collective-bound MoE train: buffer sharding + capacity factor.
+    "grok_collective": ("grok_1_314b", "train_4k", {
+        "moe_shard_buf": dict(cfg=dict(moe_shard_buffers=True)),
+        "cap1.0": dict(cfg=dict(capacity_factor=1.0)),
+        "moe_shard_buf_cap1.0": dict(cfg=dict(moe_shard_buffers=True,
+                                              capacity_factor=1.0)),
+        "segwin4096": dict(cfg=dict(segment_window=4096)),
+        "combined": dict(cfg=dict(moe_shard_buffers=True, capacity_factor=1.0,
+                                  segment_window=4096)),
+    }),
+    # 3. the paper's own technique, end to end: communicator mode on the
+    #    representative multimodal arch (Fig. 12 analog in compiled HLO).
+    "mllm_comm": ("mllm_10b", "train_4k", {
+        "allgather": dict(run=dict(comm_mode="allgather")),
+        "gather": dict(run=dict(comm_mode="gather")),
+        "segwin4096": dict(cfg=dict(segment_window=4096)),
+    }),
+    # 4. big-model representative: windowed attention at 84B.
+    "mllm84_windowed": ("mllm_84b", "train_4k", {
+        "segwin4096": dict(cfg=dict(segment_window=4096)),
+    }),
+}
+
+
+def show(row, base=None):
+    if row["status"] != "ok":
+        print(f"  !! {row['status']}: {row.get('error', row.get('reason'))}")
+        return
+    terms = {k: row[k] for k in ("compute_s", "memory_s", "collective_s")}
+    line = "  " + "  ".join(f"{k[:-2]}={v:8.3f}s" for k, v in terms.items())
+    line += f"  dominant={row['dominant']}  useful={row['useful_ratio']:.3f}"
+    if base and base["status"] == "ok":
+        deltas = []
+        for k in terms:
+            b = base[k]
+            if b:
+                deltas.append(f"{k[:-2]}:{row[k] / b:5.2f}x")
+        line += "   [vs base " + " ".join(deltas) + "]"
+    print(line, flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default=None)
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--baseline-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    if args.list:
+        for k, (a, s, vs) in EXPERIMENTS.items():
+            print(f"{k}: {a} x {s} -> {sorted(vs)}")
+        return
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    todo = [args.exp] if args.exp else list(EXPERIMENTS)
+    for name in todo:
+        arch, shape, variants = EXPERIMENTS[name]
+        print(f"=== {name}: {arch} x {shape} ===", flush=True)
+        base_f = Path(args.baseline_dir) / f"{arch}__{shape}__16x16__a2a.json"
+        if base_f.exists():
+            base = json.loads(base_f.read_text())
+        else:
+            print("  (computing baseline)", flush=True)
+            base = run_pair(arch, shape, multi_pod=False)
+            base_f.write_text(json.dumps(base, indent=1, default=str))
+        print("  baseline:")
+        show(base)
+        for vname, spec in variants.items():
+            f = out / f"{arch}__{shape}__{vname}.json"
+            if f.exists():
+                row = json.loads(f.read_text())
+            else:
+                cfg = get_config(arch)
+                if "cfg" in spec:
+                    cfg = _variant(cfg, **spec["cfg"])
+                run_kw = spec.get("run", {})
+                row = run_pair(arch, shape, multi_pod=False, cfg_override=cfg,
+                               **run_kw)
+                row["variant"] = vname
+                f.write_text(json.dumps(row, indent=1, default=str))
+            print(f"  {vname}:")
+            show(row, base)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+  compute_s    = HLO_FLOPs / peak_FLOPs          (per chip)
+  memory_s     = HLO_bytes / HBM_bw              (per chip)
+  collective_s = collective_bytes / link_bw      (per chip)
+
+``cost_analysis()`` supplies FLOPs / bytes (per device under SPMD).
+Collective bytes are NOT in cost_analysis: we parse the compiled HLO and
+sum the RESULT buffer sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute / ragged-all-to-all op
+(per-device module => per-device bytes).
+
+Hardware model: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (DCI between pods is slower; collectives that cross the 'pod' axis
+are reported separately via their replica-group parse when available).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+__all__ = ["HW", "RooflineReport", "collective_bytes", "analyze"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # B/s
+    ici_bw: float = 50e9  # B/s/link
+    chips: int = 256
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    """Sum byte sizes of every typed shape in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per collective kind, summed RESULT bytes (per-device module)."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _COLLECTIVES:
+            # Match the opcode, not substrings of other ops
+            # (all-to-all also matches ragged-all-to-all: order matters).
+            if re.search(rf"\)\s*{kind}\(", rhs) or re.search(rf"^\(?.*?\s{kind}\(", rhs):
+                if kind == "all-to-all" and "ragged-all-to-all" in rhs:
+                    continue
+                # Result type = everything before the opcode token.
+                result_txt = rhs.split(f" {kind}(")[0]
+                out[kind] += _shape_bytes(result_txt)
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_global: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
+    memory_per_device: dict[str, Any]
+
+    def row(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    cost: dict[str, Any],
+    hlo_text: str,
+    memory: dict[str, Any],
+    model_flops_global: float,
+    hw: HW = HW(),
+) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    compute_s = flops / hw.peak_flops
+    memory_s = byts / hw.hbm_bw
+    collective_s = coll["total"] / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_global / (flops * hw.chips) if flops else 0.0
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        coll_bytes_per_chip=float(coll["total"]),
+        coll_breakdown=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops_global=model_flops_global,
+        useful_ratio=useful,
+        memory_per_device=memory,
+    )

@@ -1,0 +1,243 @@
+"""Single-token decode (serve_step) with per-family caches.
+
+Cache layouts (see repro.configs.registry.cache_specs):
+  dense/moe/vlm : k,v [L,B,S,Hkv,hd] (S = sliding window if any),
+                  kv_pos/kv_seg [B,S] shared across layers
+  ssm           : conv [L,B,K-1,di], h [L,B,di,N]
+  hybrid        : mamba2 conv/h + per-group shared-attn caches
+                  sa_k/sa_v [G,B,S,Hkv,hd]
+  audio         : decoder self k/v + precomputed cross k/v per layer
+
+The new token is written at ring index ``t % S`` (full cache: S =
+seq_len, so the ring never wraps within the benchmarked step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import attention
+from repro.models.layers import apply_rope, gelu_mlp, layer_norm, rms_norm, rotary_embedding, swiglu
+from repro.models.moe import moe_ffn
+from repro.models.ssm import mamba1_decode_step, mamba2_decode_step
+
+__all__ = ["decode_step"]
+
+
+def _norm(cfg, x, scale):
+    if cfg.nonparametric_norm:
+        return layer_norm(x, None, None)
+    if cfg.family == "audio":
+        return layer_norm(x, scale, None)
+    return rms_norm(x, scale)
+
+
+def _proj_qkv(cfg, lp, x):
+    D = x.shape[-1]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = jnp.einsum("bd,dhe->bhe", x, lp["wq"].reshape(D, H, hd))
+    k = jnp.einsum("bd,dhe->bhe", x, lp["wk"].reshape(D, Hkv, hd))
+    v = jnp.einsum("bd,dhe->bhe", x, lp["wv"].reshape(D, Hkv, hd))
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    return q, k, v
+
+
+def _attn_decode(cfg, lp, x, k_cache, v_cache, kv_pos, kv_seg, t, *, window):
+    """x [B,D]; k/v_cache [B,S,Hkv,hd].  Returns (out [B,D], new k,v)."""
+    B, D = x.shape
+    S = k_cache.shape[1]
+    q, k, v = _proj_qkv(cfg, lp, x)
+    sin, cos = rotary_embedding(jnp.full((B, 1), t), cfg.head_dim_, cfg.rope_theta)
+    q = apply_rope(q[:, None], sin, cos)  # [B,1,H,hd]
+    k = apply_rope(k[:, None], sin, cos)[:, 0]
+    idx = jnp.mod(t, S)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k[:, None], idx, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v[:, None], idx, axis=1)
+    out = attention(
+        q, k_cache, v_cache,
+        q_seg=jnp.ones((B, 1), jnp.int32),
+        kv_seg=kv_seg,
+        q_pos=jnp.full((B, 1), t, jnp.int32),
+        kv_pos=kv_pos,
+        causal=True, window=window, impl="reference",
+    )  # [B,1,H,hd]
+    H, hd = cfg.n_heads, cfg.head_dim_
+    o = jnp.einsum("bhe,hed->bd", out[:, 0], lp["wo"].reshape(H, hd, D))
+    return o, k_cache, v_cache
+
+
+def _update_pos_seg(cache, t, S):
+    idx = jnp.mod(t, S)
+    kv_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["kv_pos"], jnp.broadcast_to(t, (cache["kv_pos"].shape[0], 1)).astype(jnp.int32), idx, axis=1)
+    kv_seg = jax.lax.dynamic_update_slice_in_dim(
+        cache["kv_seg"], jnp.ones((cache["kv_seg"].shape[0], 1), jnp.int32), idx, axis=1)
+    return kv_pos, kv_seg
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, t):
+    """tokens [B,1] int32; t scalar int32 (current position).
+
+    Returns (logits [B, vocab], new_cache)."""
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0)  # [B,D]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, cache = _decode_dense(cfg, params, x, cache, t)
+    elif cfg.family == "ssm":
+        x, cache = _decode_ssm(cfg, params, x, cache)
+    elif cfg.family == "hybrid":
+        x, cache = _decode_hybrid(cfg, params, x, cache, t)
+    elif cfg.family == "audio":
+        x, cache = _decode_encdec(cfg, params, x, cache, t)
+    else:
+        raise ValueError(cfg.family)
+
+    x = _final(cfg, params, x)
+    lm_head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x.astype(jnp.float32), lm_head.astype(jnp.float32))
+    return logits, cache
+
+
+def _final(cfg, params, x):
+    if cfg.nonparametric_norm:
+        return layer_norm(x, None, None)
+    if cfg.family == "audio":
+        return layer_norm(x, params["final_norm"], None)
+    return rms_norm(x, params["final_norm"])
+
+
+def _decode_dense(cfg, params, x, cache, t):
+    S = cache["k"].shape[2]
+    kv_pos, kv_seg = _update_pos_seg(cache, t, S)
+
+    def body(carry, inp):
+        lp, kc, vc = inp
+        h = _norm(cfg, carry, lp.get("attn_norm"))
+        o, kc, vc = _attn_decode(cfg, lp, h, kc, vc, kv_pos, kv_seg, t,
+                                 window=cfg.sliding_window)
+        carry = carry + o
+        h = _norm(cfg, carry, lp.get("mlp_norm"))
+        if cfg.family == "moe":
+            ff, _ = moe_ffn(h[:, None, :], lp["router"], lp["w_gate"], lp["w_up"],
+                            lp["w_down"], top_k=cfg.experts_per_token,
+                            capacity_factor=cfg.capacity_factor)
+            ff = ff[:, 0]
+        else:
+            ff = swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+        return carry + ff, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=min(cfg.scan_unroll, cfg.n_layers))
+    return x, {**cache, "k": k_new, "v": v_new, "kv_pos": kv_pos, "kv_seg": kv_seg}
+
+
+def _decode_ssm(cfg, params, x, cache):
+    def body(carry, inp):
+        lp, conv, h = inp
+        hid = rms_norm(carry, lp["norm"])
+        o, st = mamba1_decode_step(lp, hid, {"conv": conv, "h": h},
+                                   ssm_state=cfg.ssm_state)
+        return carry + o, (st["conv"], st["h"])
+
+    x, (conv_new, h_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["h"]),
+        unroll=min(cfg.scan_unroll, cfg.n_layers)
+    )
+    return x, {"conv": conv_new, "h": h_new}
+
+
+def _decode_hybrid(cfg, params, x, cache, t):
+    every = cfg.shared_attn_every
+    G = cfg.n_layers // every
+    S = cache["sa_k"].shape[2]
+    kv_pos, kv_seg = _update_pos_seg(
+        {"kv_pos": cache["sa_kv_pos"], "kv_seg": cache["sa_kv_seg"]}, t, S
+    )
+    shared = params["shared_attn"]
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((G, every) + a.shape[1:]), params["layers"]
+    )
+    conv_g = cache["conv"].reshape((G, every) + cache["conv"].shape[1:])
+    h_g = cache["h"].reshape((G, every) + cache["h"].shape[1:])
+
+    def group(carry, inp):
+        gp, conv, h = inp
+
+        def mamba(c2, inp2):
+            lp, cv, hh = inp2
+            hid = rms_norm(c2, lp["norm"])
+            o, st = mamba2_decode_step(lp, hid, {"conv": cv, "h": hh},
+                                       ssm_state=cfg.ssm_state,
+                                       headdim=cfg.ssm_headdim)
+            return c2 + o, (st["conv"], st["h"])
+
+        carry, (cv_new, h_new) = jax.lax.scan(
+            mamba, carry, (gp, conv, h),
+            unroll=min(cfg.scan_unroll, every))
+        return carry, (cv_new, h_new)
+
+    # Interleave: groups of mamba followed by the shared attention block.
+    sa_k, sa_v = [], []
+    ks, vs = cache["sa_k"], cache["sa_v"]
+    conv_out, h_out = [], []
+    carry = x
+    for g in range(G):
+        gp = jax.tree_util.tree_map(lambda a: a[g], grouped)
+        carry, (cv, hh) = group(carry, (gp, conv_g[g], h_g[g]))
+        conv_out.append(cv)
+        h_out.append(hh)
+        hnorm = rms_norm(carry, shared["attn_norm"])
+        o, knew, vnew = _attn_decode(cfg, shared, hnorm, ks[g], vs[g],
+                                     kv_pos, kv_seg, t, window=None)
+        carry = carry + o
+        hnorm = rms_norm(carry, shared["mlp_norm"])
+        carry = carry + swiglu(hnorm, shared["w_gate"], shared["w_up"], shared["w_down"])
+        sa_k.append(knew)
+        sa_v.append(vnew)
+
+    return carry, {
+        "conv": jnp.stack(conv_out).reshape(cache["conv"].shape),
+        "h": jnp.stack(h_out).reshape(cache["h"].shape),
+        "sa_k": jnp.stack(sa_k),
+        "sa_v": jnp.stack(sa_v),
+        "sa_kv_pos": kv_pos,
+        "sa_kv_seg": kv_seg,
+    }
+
+
+def _decode_encdec(cfg, params, x, cache, t):
+    S = cache["k"].shape[2]
+    kv_pos, kv_seg = _update_pos_seg(cache, t, S)
+
+    def body(carry, inp):
+        lp, kc, vc, xk, xv = inp
+        h = _norm(cfg, carry, lp.get("attn_norm"))
+        o, kc, vc = _attn_decode(cfg, lp, h, kc, vc, kv_pos, kv_seg, t, window=None)
+        carry = carry + o
+        # Cross attention against precomputed encoder K/V.
+        h = _norm(cfg, carry, lp.get("cross_norm"))
+        H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        D = h.shape[-1]
+        q = jnp.einsum("bd,dhe->bhe", h, lp["xwq"].reshape(D, H, hd))
+        out = attention(
+            q[:, None], xk, xv,
+            q_seg=jnp.ones((h.shape[0], 1), jnp.int32),
+            kv_seg=cache["cross_seg"],
+            q_pos=jnp.full((h.shape[0], 1), t, jnp.int32),
+            kv_pos=cache["cross_pos"],
+            causal=False, window=None, impl="reference",
+        )
+        carry = carry + jnp.einsum("bhe,hed->bd", out[:, 0], lp["xwo"].reshape(H, hd, D))
+        h = _norm(cfg, carry, lp.get("mlp_norm"))
+        return carry + gelu_mlp(h, lp["w_in"], lp["w_out"]), (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x,
+        (params["layers"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+        unroll=min(cfg.scan_unroll, cfg.n_layers),
+    )
+    return x, {**cache, "k": k_new, "v": v_new, "kv_pos": kv_pos, "kv_seg": kv_seg}

@@ -1,0 +1,83 @@
+"""Shared neural building blocks (pure JAX, functional)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "swiglu",
+    "gelu_mlp",
+    "rotary_embedding",
+    "apply_rope",
+    "init_dense",
+]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray | None, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm; ``scale=None`` gives the non-parametric variant (OLMo
+    uses non-parametric LayerNorm; we expose both)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray | None = None,
+               bias: jnp.ndarray | None = None, eps: float = 1e-5) -> jnp.ndarray:
+    """LayerNorm; with scale=bias=None this is OLMo's non-parametric LN
+    (arXiv:2402.00838)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP (llama/qwen/mistral family)."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: jnp.ndarray, w_in: jnp.ndarray, w_out: jnp.ndarray) -> jnp.ndarray:
+    """Plain GELU MLP (whisper / ViT style)."""
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in)), w_out)
+
+
+def rotary_embedding(positions: jnp.ndarray, head_dim: int,
+                     theta: float = 10_000.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(sin, cos) tables for the given integer positions; [..., head_dim/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; sin/cos: [..., seq, head_dim/2]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def init_dense(key: jax.Array, shape: tuple[int, ...], dtype,
+               scale: float | None = None) -> jnp.ndarray:
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)

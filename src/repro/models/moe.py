@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN (grok-1: 8e top-2; granite: 40e top-8).
+
+Sort-based capacity dispatch (TPU-friendly, static shapes):
+  1. router logits -> top-k (expert id, weight) per token
+  2. flatten (token, k) assignments, sort by expert id
+  3. slot within expert = rank inside its expert's contiguous run
+  4. scatter tokens into a [E, C, d] buffer (drop beyond capacity C)
+  5. batched expert matmuls [E,C,d] x [E,d,f]
+  6. gather back and combine with router weights
+
+Expert parallelism: the [E,C,*] buffers and expert weights carry
+sharding constraints over the ``model`` mesh axis (weights: d_ff dim;
+buffers: capacity dim), so the big matmuls are tensor-parallel within
+each expert -- this avoids requiring n_experts % mesh_model == 0
+(grok has 8 experts on a 16-wide model axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_ffn", "router_load_balance_loss"]
+
+
+def moe_ffn(
+    x: jnp.ndarray,
+    router_w: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    valid: jnp.ndarray | None = None,
+    shard_buffers: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, T, d]; router_w: [d, E]; w_*: [E, d, f] / [E, f, d].
+
+    ``valid``: [B, T] bool -- padding tokens get zero routing weight so
+    they never steal capacity (post-balancing keeps padding minimal, but
+    the packed stream tail may be padded to the static capacity).
+
+    Returns (output [B,T,d], aux metrics dict packed as an array tuple).
+    """
+    B, T, d = x.shape
+    E = router_w.shape[-1]
+    n = B * T
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), router_w.astype(jnp.float32))
+    if valid is not None:
+        logits = jnp.where(valid.reshape(n, 1), logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_ids = jax.lax.top_k(probs, top_k)  # [n, k]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    if valid is not None:
+        gate_vals = gate_vals * valid.reshape(n, 1)
+
+    # Flatten assignments and sort by expert.
+    flat_e = gate_ids.reshape(-1)  # [n*k]
+    flat_tok = jnp.repeat(jnp.arange(n), top_k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+
+    # Rank within expert run: position - start_of_expert.
+    counts = jnp.zeros(E, jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n * top_k) - starts[sorted_e]
+
+    capacity = int(max(1, round(n * top_k / E * capacity_factor)))
+    keep = rank < capacity
+    slot = jnp.where(keep, sorted_e * capacity + rank, E * capacity)  # overflow -> dropped row
+
+    buf = jnp.zeros((E * capacity + 1, d), x.dtype)
+    buf = buf.at[slot].set(xf[sorted_tok], mode="drop")
+    buf = buf[:-1].reshape(E, capacity, d)
+    if shard_buffers:
+        # S-Perf knob: pin the dispatch buffer's capacity dim to the
+        # model axis so expert matmuls parallelize over C instead of
+        # round-tripping through resharding collectives.
+        from jax.sharding import PartitionSpec as _P
+
+        buf = jax.lax.with_sharding_constraint(buf, _P(None, "model", None))
+
+    # Expert matmuls (tensor-parallel over f via weight sharding).
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(E * capacity, d)
+    out_buf = jnp.concatenate([out_buf, jnp.zeros((1, d), out_buf.dtype)], axis=0)
+
+    # Gather back to (token, k) order and combine.
+    expert_out = out_buf[slot]  # [n*k, d] (dropped -> zeros row)
+    inv = jnp.argsort(order, stable=True)
+    expert_out = expert_out[inv].reshape(n, top_k, d)
+    combined = jnp.einsum("nkd,nk->nd", expert_out.astype(jnp.float32),
+                          gate_vals.astype(jnp.float32))
+
+    aux = router_load_balance_loss(probs, gate_ids, E, valid.reshape(n) if valid is not None else None)
+    return combined.reshape(B, T, d).astype(x.dtype), aux
+
+
+def router_load_balance_loss(
+    probs: jnp.ndarray, gate_ids: jnp.ndarray, n_experts: int,
+    valid: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Switch-style aux loss: E * sum_e fraction_tokens_e * mean_prob_e."""
+    n = probs.shape[0]
+    top1 = gate_ids[:, 0]
+    onehot = jax.nn.one_hot(top1, n_experts, dtype=jnp.float32)
+    if valid is not None:
+        onehot = onehot * valid[:, None]
+        denom = jnp.clip(valid.sum(), 1.0)
+    else:
+        denom = float(n)
+    frac = onehot.sum(0) / denom
+    mean_p = probs.mean(0)
+    return n_experts * jnp.sum(frac * mean_p)

@@ -1,0 +1,210 @@
+"""Decoder / encoder stacks with scan-over-layers + remat.
+
+Layer parameters are STACKED on a leading [L, ...] axis and consumed by
+``lax.scan`` -- the compiled HLO is one layer body regardless of depth,
+which keeps multi-pod lowering fast and makes the remat policy a single
+``jax.checkpoint`` on the scan body.
+
+Families:
+  dense / moe         attention + (SwiGLU | MoE) blocks
+  ssm                 Mamba-1 blocks (falcon-mamba)
+  hybrid              Mamba-2 blocks + ONE shared attention block applied
+                      every ``shared_attn_every`` layers (zamba2)
+  audio (enc-dec)     bidirectional encoder + causal decoder with
+                      cross-attention (whisper)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import attention
+from repro.models.layers import apply_rope, gelu_mlp, layer_norm, rms_norm, rotary_embedding, swiglu
+from repro.models.moe import moe_ffn
+from repro.models.ssm import (
+    mamba1_block,
+    mamba1_decode_step,
+    mamba2_block,
+    mamba2_decode_step,
+)
+
+Params = dict[str, Any]
+
+
+def _norm(cfg: ModelConfig, x, scale):
+    if cfg.nonparametric_norm:
+        return layer_norm(x, None, None)
+    if cfg.family == "audio":
+        return layer_norm(x, scale, None)
+    return rms_norm(x, scale)
+
+
+def _attend(cfg: ModelConfig, p: Params, x, seg, pos, sin, cos, *,
+            causal=True, kv=None, kv_seg=None, kv_pos=None, impl=None):
+    """Shared attention core.  kv!=None -> cross attention (no rope, no
+    sliding window; segment pairing keeps each example attending to its
+    own encoder output)."""
+    B, T, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = jnp.einsum("btd,dhe->bthe", x, p["wq"].reshape(D, H, hd))
+    src = x if kv is None else kv
+    k = jnp.einsum("btd,dhe->bthe", src, p["wk"].reshape(src.shape[-1], Hkv, hd))
+    v = jnp.einsum("btd,dhe->bthe", src, p["wv"].reshape(src.shape[-1], Hkv, hd))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if kv is None:  # self attention: rope on both
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+        kv_seg, kv_pos = seg, pos
+    use_impl = impl or cfg.attention_impl
+    if cfg.segment_window and kv is None and use_impl.startswith("chunked"):
+        use_impl = use_impl.replace("chunked", "windowed")
+    out = attention(
+        q, k, v,
+        q_seg=seg, kv_seg=kv_seg, q_pos=pos, kv_pos=kv_pos,
+        causal=causal, window=cfg.sliding_window if kv is None else None,
+        impl=use_impl,
+        block_q=cfg.block_q, block_kv=cfg.block_kv,
+        chunk_w=cfg.segment_window,
+    )
+    return jnp.einsum("bthe,hed->btd", out, p["wo"].reshape(H, hd, D))
+
+
+def _ffn(cfg: ModelConfig, p: Params, x, valid):
+    if cfg.family == "moe":
+        return moe_ffn(
+            x, p["router"], p["w_gate"], p["w_up"], p["w_down"],
+            top_k=cfg.experts_per_token, capacity_factor=cfg.capacity_factor,
+            valid=valid, shard_buffers=cfg.moe_shard_buffers,
+        )
+    if cfg.family == "audio":
+        return gelu_mlp(x, p["w_in"], p["w_out"]), jnp.float32(0.0)
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), jnp.float32(0.0)
+
+
+def _attn_mlp_layer(cfg: ModelConfig, p: Params, x, seg, pos, sin, cos, *, causal=True):
+    h = _norm(cfg, x, p.get("attn_norm"))
+    x = x + _attend(cfg, p, h, seg, pos, sin, cos, causal=causal)
+    h = _norm(cfg, x, p.get("mlp_norm"))
+    ff, aux = _ffn(cfg, p, h, seg > 0)
+    return x + ff, aux
+
+
+# ----------------------------------------------------------------------
+# Forward stacks (training / prefill).
+# ----------------------------------------------------------------------
+def decoder_stack(cfg: ModelConfig, params: Params, x, seg, pos):
+    """x [B,T,D] -> ([B,T,D], aux_loss scalar).  params["layers"] leaves
+    are stacked [L, ...]."""
+    sin, cos = rotary_embedding(pos, cfg.head_dim_, cfg.rope_theta)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, lp):
+            y, aux = _attn_mlp_layer(cfg, lp, carry, seg, pos, sin, cos)
+            return y, aux
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, auxs = jax.lax.scan(body, x, params["layers"],
+                               unroll=min(cfg.scan_unroll, cfg.n_layers))
+        return x, auxs.sum()
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            h = _norm(cfg, carry, lp.get("norm"))
+            y = mamba1_block(lp, h, seg, ssm_state=cfg.ssm_state)
+            return carry + y, jnp.float32(0.0)
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["layers"],
+                            unroll=min(cfg.scan_unroll, cfg.n_layers))
+        return x, jnp.float32(0.0)
+
+    if cfg.family == "hybrid":
+        return _hybrid_stack(cfg, params, x, seg, pos, sin, cos)
+
+    raise ValueError(f"decoder_stack does not handle family {cfg.family}")
+
+
+def _hybrid_stack(cfg: ModelConfig, params: Params, x, seg, pos, sin, cos):
+    """zamba2: groups of mamba2 layers, shared attention block between
+    groups (one weight set reused -- the Zamba trick)."""
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    shared = params["shared_attn"]
+
+    # params["layers"] leaves are [L, ...]; reshape to [n_groups, every, ...].
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups, every) + a.shape[1:]), params["layers"]
+    )
+
+    def mamba_body(carry, lp):
+        h = _norm(cfg, carry, lp.get("norm"))
+        y = mamba2_block(lp, h, seg, ssm_state=cfg.ssm_state, headdim=cfg.ssm_headdim)
+        return carry + y, None
+
+    mamba_body_ck = jax.checkpoint(mamba_body) if cfg.remat else mamba_body
+
+    # Roofline mode: unroll the inner mamba scan so every layer's FLOPs
+    # are visible to cost_analysis (outer scan handled by extrapolation).
+    inner_unroll = every if cfg.attention_impl == "chunked_unrolled" else 1
+
+    def group_body(carry, gp):
+        y, _ = jax.lax.scan(mamba_body_ck, carry, gp, unroll=inner_unroll)
+        y2, _ = _attn_mlp_layer(cfg, shared, y, seg, pos, sin, cos)
+        return y2, None
+
+    group_body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, _ = jax.lax.scan(group_body, x, grouped,
+                        unroll=min(cfg.scan_unroll, n_groups))
+    return x, jnp.float32(0.0)
+
+
+def encoder_stack(cfg: ModelConfig, params: Params, x, seg, pos):
+    """Bidirectional encoder (whisper); LayerNorm + GELU, no rope mixing
+    across segments."""
+    sin, cos = rotary_embedding(pos, cfg.head_dim_, cfg.rope_theta)
+
+    def body(carry, lp):
+        y, _ = _attn_mlp_layer(cfg, lp, carry, seg, pos, sin, cos, causal=False)
+        return y, None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    L = jax.tree_util.tree_leaves(params["enc_layers"])[0].shape[0]
+    x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                        unroll=min(cfg.scan_unroll, L))
+    return x
+
+
+def cross_decoder_stack(cfg: ModelConfig, params: Params, x, seg, pos,
+                        enc_out, enc_seg, enc_pos):
+    """Whisper decoder: self-attn (causal) + cross-attn + GELU MLP."""
+    sin, cos = rotary_embedding(pos, cfg.head_dim_, cfg.rope_theta)
+
+    def body(carry, lp):
+        h = _norm(cfg, carry, lp.get("attn_norm"))
+        carry = carry + _attend(cfg, lp, h, seg, pos, sin, cos, causal=True)
+        h = _norm(cfg, carry, lp.get("cross_norm"))
+        carry = carry + _attend(
+            cfg, _cross_params(lp), h, seg, pos, sin, cos,
+            causal=False, kv=enc_out, kv_seg=enc_seg, kv_pos=enc_pos,
+        )
+        h = _norm(cfg, carry, lp.get("mlp_norm"))
+        ff, _ = _ffn(cfg, lp, h, seg > 0)
+        return carry + ff, None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                        unroll=min(cfg.scan_unroll, cfg.n_layers))
+    return x
+
+
+def _cross_params(lp: Params) -> Params:
+    return {
+        "wq": lp["xwq"], "wk": lp["xwk"], "wv": lp["xwv"], "wo": lp["xwo"],
+        "q_norm": lp.get("q_norm"), "k_norm": lp.get("k_norm"),
+    }

@@ -1,0 +1,39 @@
+"""Serving: batched single-token decode + cache init.
+
+``make_serve_step(cfg)`` -> jit-able ``(params, tokens, cache, t) ->
+(next_tokens, logits, cache)``; greedy sampling (argmax) keeps the step
+deterministic for tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.decode import decode_step
+
+__all__ = ["make_serve_step", "init_cache"]
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, cache, t):
+        logits, cache = decode_step(cfg, params, tokens, cache, t)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, logits, cache
+
+    return serve_step
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Zero-initialized decode cache matching registry.cache_specs."""
+    from repro.configs.registry import cache_specs
+
+    specs = cache_specs(cfg, batch, seq_len)
+
+    def zeros(tree):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), tree,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    return zeros(specs)

@@ -1,0 +1,138 @@
+"""PartitionSpecs for params, optimizer state, batches and decode caches.
+
+Strategy (mirrors the paper's FSDP setup, S7/S8, mapped to TPU):
+  * params: ZeRO-3-style sharding over the ``data`` axis + tensor
+    parallelism over ``model``; the ``pod`` axis REPLICATES params --
+    that's the paper's hybrid-shard group (they used group size 256; our
+    single-pod data*model = 256 matches), with gradient all-reduce over
+    pods.
+  * batch streams: leading (DP-shard) dim over (pod, data).
+  * decode caches: batch dim over DP when divisible; otherwise the
+    long-context case (B=1) shards the sequence / feature dims instead.
+
+Assignment is pattern-free: for every param leaf we pick the last dim
+divisible by the ``model`` axis for TP and the largest remaining dim
+divisible by ``data`` for FSDP, skipping the stacked-layer leading dim.
+This is deliberately generic -- per-arch hand overrides live in the
+perf-iteration layer (EXPERIMENTS.md S-Perf), not here.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "param_specs",
+    "opt_state_specs",
+    "batch_specs",
+    "cache_sharding_specs",
+    "to_shardings",
+]
+
+
+def _leaf_spec(shape: tuple[int, ...], data: int, model: int,
+               *, skip_dims: int = 0) -> P:
+    """Generic FSDP+TP assignment with divisibility checks."""
+    spec: list[Any] = [None] * len(shape)
+    dims = list(range(skip_dims, len(shape)))
+    # TP: last eligible dim divisible by `model` and reasonably large.
+    tp_dim = None
+    for d in reversed(dims):
+        if model > 1 and shape[d] % model == 0 and shape[d] >= 2 * model:
+            tp_dim = d
+            spec[d] = "model"
+            break
+    # FSDP: largest remaining dim divisible by `data`.
+    best, best_size = None, 0
+    for d in dims:
+        if d == tp_dim:
+            continue
+        if data > 1 and shape[d] % data == 0 and shape[d] >= data and shape[d] > best_size:
+            best, best_size = d, shape[d]
+    if best is not None:
+        spec[best] = "data"
+    return P(*spec)
+
+
+def param_specs(cfg: ModelConfig, params, mesh: Mesh):
+    """Specs matching the params pytree.  Stacked-layer leaves (inside
+    'layers'/'enc_layers') skip their leading [L] dim."""
+    data = mesh.shape.get("data", 1)
+    model = mesh.shape.get("model", 1)
+
+    def walk(tree, stacked: bool):
+        if isinstance(tree, dict):
+            return {
+                k: walk(v, stacked or k in ("layers", "enc_layers"))
+                for k, v in tree.items()
+            }
+        return _leaf_spec(tree.shape, data, model, skip_dims=1 if stacked else 0)
+
+    return walk(params, False)
+
+
+def opt_state_specs(p_specs):
+    return {
+        "mu": p_specs,
+        "nu": p_specs,
+        "step": P(),
+    }
+
+
+def batch_specs(batch: dict[str, Any], dp_axes: tuple[str, ...]) -> dict[str, P]:
+    """All batch arrays carry the DP-shard layout on their leading dim."""
+    return {k: P(dp_axes) for k in batch}
+
+
+def cache_sharding_specs(cfg: ModelConfig, cache, dp_axes: tuple[str, ...],
+                         mesh: Mesh):
+    """Decode-cache specs; see module docstring for the B=1 fallback."""
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    model = mesh.shape.get("model", 1)
+    all_axes = tuple(mesh.axis_names)
+
+    def leaf(path: str, x) -> P:
+        shape = x.shape
+        if path in ("kv_pos", "kv_seg", "sa_kv_pos", "sa_kv_seg",
+                    "cross_seg", "cross_pos"):
+            B = shape[0]
+            return P(dp_axes) if B % dp == 0 and B >= dp else P()
+        if path in ("k", "v", "sa_k", "sa_v", "cross_k", "cross_v"):
+            L, B, S = shape[0], shape[1], shape[2]
+            if B % dp == 0 and B >= dp:
+                seq_ax = "model" if S % model == 0 and S >= model else None
+                return P(None, dp_axes, seq_ax, None, None)
+            # Long-context: shard the sequence across everything it divides.
+            if S % int(np.prod([mesh.shape[a] for a in all_axes])) == 0:
+                return P(None, None, all_axes, None, None)
+            return P(None, None, dp_axes if S % dp == 0 else None, None, None)
+        if path == "conv":
+            L, B = shape[0], shape[1]
+            di = shape[-1]
+            if B % dp == 0 and B >= dp:
+                return P(None, dp_axes, None, "model" if di % model == 0 else None)
+            return P(None, None, None, "model" if di % model == 0 else None)
+        if path == "h":
+            B = shape[1]
+            if B % dp == 0 and B >= dp:
+                if len(shape) == 4:  # mamba1 [L,B,di,N]
+                    return P(None, dp_axes, "model" if shape[2] % model == 0 else None, None)
+                return P(None, dp_axes, None, None, None)  # mamba2 [L,B,H,P,N]
+            if len(shape) == 4:
+                return P(None, None, "model" if shape[2] % model == 0 else None, None)
+            return P()
+        return P()
+
+    return {k: leaf(k, v) for k, v in cache.items()}
+
+
+def to_shardings(specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,107 @@
+"""Train / prefill step factories.
+
+``make_train_step(cfg, mesh, ...)`` returns a jit-able function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` whose
+forward pass embeds the orchestrator's communicator exchange (the
+composed all-to-all) between encoder phases and the LLM backbone.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.communicator import apply_comm_plan
+from repro.models.model import forward
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["make_exchange", "make_loss_fn", "make_train_step", "make_prefill_step"]
+
+
+def make_exchange(cfg: ModelConfig, mesh, dp_axes, *, mode: str = "a2a"):
+    """Build the orchestrator's device-side exchange closure.
+
+    Reads the per-encoder plan arrays out of the batch; moves encoder
+    output tokens [S, cap_out_shard, D] -> destination shards.  With
+    ``mesh=None`` (single-host tests) the exchange degrades to the
+    'gather' mode: a plain global take with identical semantics."""
+
+    def exchange_factory(batch):
+        def exchange(name: str, enc_tok: jnp.ndarray) -> jnp.ndarray:
+            S, T, D = enc_tok.shape
+            plan = {
+                "pre_gather_dense": batch[f"enc_{name}_plan_pre_gather_dense"],
+                "post_gather_dense": batch[f"enc_{name}_plan_post_gather_dense"],
+                "post_mask": batch[f"enc_{name}_plan_post_mask"],
+                "global_gather": batch[f"enc_{name}_plan_global_gather"],
+                "post_gather": batch[f"enc_{name}_plan_post_gather_dense"],  # alias for cap_out
+            }
+            cap_out = plan["post_gather_dense"].shape[-1]
+            flat = enc_tok.reshape(S * T, D)
+            if mesh is None:
+                idx = plan["global_gather"].reshape(-1)
+                mask = plan["post_mask"].reshape(-1)
+                out = jnp.where(mask[:, None], jnp.take(flat, idx, axis=0), 0)
+            else:
+                out = apply_comm_plan(flat, plan, mesh, dp_axes, mode=mode)
+            return out.reshape(S, cap_out, D)
+
+        return exchange
+
+    return exchange_factory
+
+
+def make_loss_fn(cfg: ModelConfig, mesh=None, dp_axes=("data",), *, comm_mode="a2a"):
+    exchange_factory = make_exchange(cfg, mesh, dp_axes, mode=comm_mode)
+
+    def loss_fn(params, batch):
+        ex = exchange_factory(batch) if cfg.encoders else None
+        loss_sum, n, aux = forward(cfg, params, batch, exchange=ex)
+        n = jnp.maximum(n, 1)
+        loss = loss_sum / n + 0.01 * aux
+        return loss, {"loss": loss_sum / n, "aux_loss": aux, "tokens": n}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig | None = None,
+    mesh=None,
+    dp_axes=("data",),
+    *,
+    comm_mode: str = "a2a",
+):
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = make_loss_fn(cfg, mesh, dp_axes, comm_mode=comm_mode)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, dp_axes=("data",), *,
+                      comm_mode: str = "a2a"):
+    """Forward-only (inference prefill): returns per-stream loss metrics.
+    Serving prefill reuses the same packed-stream forward; logits for
+    sampling come from the serve path."""
+    loss_fn = make_loss_fn(cfg, mesh, dp_axes, comm_mode=comm_mode)
+
+    def prefill_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return prefill_step
+
+
+def init_train_state(cfg: ModelConfig, key):
+    from repro.models.model import init_params
+
+    params = init_params(cfg, key)
+    return params, adamw_init(params)

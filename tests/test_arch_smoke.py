@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For each of the 10 assigned architectures (+ the paper's 3 MLLMs):
+instantiate the REDUCED variant of the same family (<=2 layers,
+d_model<=512, <=4 experts), run one forward/train step on CPU through
+the full orchestrator pipeline, assert output shapes + finite losses
+(no NaNs); run one decode step where the family supports decoding.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.core.orchestrator import MLLMGlobalOrchestrator
+from repro.data.synthetic import Example, sample_examples
+from repro.serving.serve_step import init_cache, make_serve_step
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def _tiny_examples(cfg, rng, d=2, per=3):
+    """Small examples matching the arch's modalities."""
+    out = []
+    for i in range(d):
+        insts = []
+        for j in range(per):
+            text = int(rng.integers(8, 40))
+            vis = aud = 0
+            order = ("text",)
+            names = [e.name for e in cfg.encoders]
+            if "vision" in names and (j % 2 == 0 or cfg.family == "vlm"):
+                vis = int(rng.integers(4, 24)) * max(
+                    e.downsample for e in cfg.encoders if e.name == "vision"
+                )
+                order = ("vision", "text")
+            if "audio" in names and (cfg.family == "audio" or j % 2 == 1):
+                aud = int(rng.integers(8, 48)) * max(
+                    e.downsample for e in cfg.encoders if e.name == "audio"
+                )
+                order = ("audio", "text") if vis == 0 else ("vision", "audio", "text")
+            insts.append(Example("smoke", text, vis, aud, order))
+        out.append(insts)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch).smoke()
+    rng = np.random.default_rng(0)
+    d = 2
+    orch = MLLMGlobalOrchestrator(cfg, d, vocab=cfg.vocab_size)
+    examples = _tiny_examples(cfg, rng, d=d)
+    caps = orch.default_capacities(examples, margin=2.0)
+    batch_np, report = orch.plan_and_pack(examples, caps, rng)
+    batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+
+    params, opt_state = init_train_state(cfg, jax.random.PRNGKey(0))
+    # mesh=None -> the exchange runs as a global gather with identical
+    # semantics (true multi-device path covered by subprocess tests).
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3), mesh=None)
+    params2, opt2, metrics = jax.jit(step)(params, opt_state, batch)
+
+    assert jnp.isfinite(metrics["loss"]), f"{arch}: loss not finite"
+    assert jnp.isfinite(metrics["grad_norm"])
+    assert metrics["tokens"] > 0
+    # Params changed and kept shapes.
+    flat_a = jax.tree_util.tree_leaves(params)
+    flat_b = jax.tree_util.tree_leaves(params2)
+    assert all(a.shape == b.shape for a, b in zip(flat_a, flat_b))
+    changed = any(
+        not jnp.allclose(a.astype(jnp.float32), b.astype(jnp.float32))
+        for a, b in zip(flat_a, flat_b)
+    )
+    assert changed, f"{arch}: no parameter changed"
+    # Balancing report sanity.
+    assert 0 < report.phase_utilization["llm"] <= 1.0
+
+
+DECODE_ARCHS = [a for a in ARCHITECTURES if a not in ()]
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch).smoke()
+    B, S = 2, 64
+    params, _ = init_train_state(cfg, jax.random.PRNGKey(1))
+    cache = init_cache(cfg, B, S)
+    if cfg.family == "audio":
+        # Fill cross-attention memory with a fake encoded segment.
+        cache["cross_seg"] = cache["cross_seg"].at[:, :8].set(1)
+    serve = jax.jit(make_serve_step(cfg))
+    tokens = jnp.ones((B, 1), jnp.int32)
+    nxt, logits, cache = serve(params, tokens, cache, jnp.int32(3))
+    assert nxt.shape == (B, 1)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), f"{arch}: decode logits not finite"
+    # Second step consumes the updated cache.
+    nxt2, logits2, _ = serve(params, nxt, cache, jnp.int32(4))
+    assert jnp.isfinite(logits2).all()

@@ -1,0 +1,191 @@
+"""Unit + property tests for the Batch Post-Balancing algorithms (paper S5.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.balancing import (
+    brute_force_oracle,
+    flatten_instance_lengths,
+    post_balance,
+    post_balance_conv,
+    post_balance_nopad,
+    post_balance_pad,
+    post_balance_quad,
+)
+from repro.core.cost_model import CostModel, batch_length, transformer_cost_coeffs
+from repro.core.rearrangement import identity_rearrangement
+
+
+def _mk_lengths(rng, d, lo=1, hi=100, per=4):
+    return [rng.integers(lo, hi, size=rng.integers(1, per + 1)) for _ in range(d)]
+
+
+# ----------------------------------------------------------------------
+# Cost model.
+# ----------------------------------------------------------------------
+def test_batch_length_eq1():
+    assert batch_length([3, 5, 2], padding=True) == 3 * 5
+    assert batch_length([3, 5, 2], padding=False) == 10
+    assert batch_length([], padding=True) == 0
+
+
+def test_cost_model_variants():
+    cm_lin = CostModel(alpha=1.0, beta=0.0)
+    assert cm_lin.cost([2, 3]) == 5.0
+    cm_quad = CostModel(alpha=1.0, beta=0.5)
+    assert cm_quad.cost([2, 3]) == 5.0 + 0.5 * 13
+    cm_pad = CostModel(alpha=1.0, beta=0.5, padding=True)
+    # L = 2*3=6; f = 6 + 0.5*36/2 = 15
+    assert cm_pad.cost([2, 3]) == 15.0
+    cm_conv = CostModel(alpha=1.0, beta=0.5, conv_attention=True)
+    # f = 5 + 0.5*2*9 = 14
+    assert cm_conv.cost([2, 3]) == 14.0
+
+
+def test_transformer_coeffs_ssm_has_no_quadratic_term():
+    a, b = transformer_cost_coeffs(1024, 4096, 24, ssm=True)
+    assert b == 0.0
+    a2, b2 = transformer_cost_coeffs(1024, 4096, 24)
+    assert b2 > 0.0
+
+
+# ----------------------------------------------------------------------
+# Permutation invariants: every algorithm must output a true rearrangement
+# (each input example appears exactly once) -- the consequence-invariance
+# precondition of S3.3.
+# ----------------------------------------------------------------------
+ALGOS = {
+    "nopad": post_balance_nopad,
+    "pad": post_balance_pad,
+    "quad": post_balance_quad,
+    "conv": post_balance_conv,
+}
+
+
+@pytest.mark.parametrize("name", sorted(ALGOS))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_algorithms_are_permutations(name, seed):
+    rng = np.random.default_rng(seed)
+    d = 8
+    lens = _mk_lengths(rng, d, per=6)
+    items = flatten_instance_lengths(lens)
+    pi = ALGOS[name](items, d)
+    got = sorted(zip(pi.orig_inst.tolist(), pi.orig_slot.tolist()))
+    want = sorted((i, j) for i, j, _ in items)
+    assert got == want
+    # Destination slots are contiguous per destination batch.
+    for i in range(d):
+        slots = sorted(pi.dst_slot[pi.dst_inst == i].tolist())
+        assert slots == list(range(len(slots)))
+    # Lengths preserved.
+    assert sorted(pi.lengths.tolist()) == sorted(l for _, _, l in items)
+
+
+@given(
+    st.lists(
+        st.lists(st.integers(1, 50), min_size=1, max_size=5), min_size=2, max_size=6
+    )
+)
+@settings(max_examples=40, deadline=None)
+def test_property_nopad_never_worse_than_identity(lens_py):
+    """Post-balancing can only reduce the max batch token sum."""
+    d = len(lens_py)
+    lens = [np.array(x) for x in lens_py]
+    cm = CostModel(alpha=1.0, beta=0.0)
+    ident = identity_rearrangement(lens, d)
+    pi = post_balance(lens, d, cm)
+    max_before = max(cm.cost(l) for l in ident.dest_lengths())
+    max_after = max(cm.cost(l) for l in pi.dest_lengths())
+    assert max_after <= max_before + 1e-9
+
+
+@given(
+    st.lists(
+        st.lists(st.integers(1, 30), min_size=1, max_size=4), min_size=2, max_size=4
+    )
+)
+@settings(max_examples=30, deadline=None)
+def test_property_lpt_within_4_3_of_oracle(lens_py):
+    """Alg 1 is a 4/3-approximation of the makespan objective."""
+    d = len(lens_py)
+    lens = [np.array(x) for x in lens_py]
+    n = sum(len(x) for x in lens_py)
+    if n > 10:
+        return
+    cm = CostModel(alpha=1.0, beta=0.0)
+    pi = post_balance(lens, d, cm)
+    got = max(cm.cost(l) for l in pi.dest_lengths())
+    opt = brute_force_oracle(lens, d, cm)
+    assert got <= 4.0 / 3.0 * opt + 1e-9
+
+
+def test_pad_algorithm_minimizes_padded_batch_length():
+    rng = np.random.default_rng(7)
+    d = 4
+    lens = _mk_lengths(rng, d, lo=5, hi=200, per=8)
+    cm = CostModel(alpha=1.0, beta=0.0, padding=True)
+    ident = identity_rearrangement(lens, d)
+    pi = post_balance(lens, d, cm)
+    before = max(batch_length(l, True) for l in ident.dest_lengths())
+    after = max(batch_length(l, True) for l in pi.dest_lengths() if l.size)
+    assert after <= before
+    # Binary search returns <= d non-empty batches.
+    assert sum(1 for l in pi.dest_lengths() if l.size) <= d
+
+
+def test_pad_algorithm_is_optimal_for_its_packing_family():
+    # For equal lengths, the padded objective is n/d * l exactly.
+    d = 4
+    lens = [np.full(5, 7) for _ in range(d)]
+    cm = CostModel(padding=True)
+    pi = post_balance(lens, d, cm)
+    after = max(batch_length(l, True) for l in pi.dest_lengths() if l.size)
+    assert after == 5 * 7
+
+
+def test_quad_beats_nopad_on_quadratic_objective():
+    """Alg 3 should (weakly) beat Alg 1 on f = L + lam*sum(l^2) for a
+    distribution with heavy tails, which is its design target."""
+    rng = np.random.default_rng(3)
+    d = 8
+    lens = [
+        np.concatenate([rng.integers(1, 10, size=6), rng.integers(200, 400, size=1)])
+        for _ in range(d)
+    ]
+    cm = CostModel(alpha=1.0, beta=0.01)
+    pi1 = post_balance(lens, d, cm, algorithm="nopad")
+    pi3 = post_balance(lens, d, cm, algorithm="quad")
+    m1 = max(cm.cost(l) for l in pi1.dest_lengths())
+    m3 = max(cm.cost(l) for l in pi3.dest_lengths())
+    assert m3 <= m1 * 1.05  # never meaningfully worse
+
+
+def test_conv_algorithm_handles_conv_objective():
+    rng = np.random.default_rng(5)
+    d = 4
+    lens = _mk_lengths(rng, d, lo=10, hi=500, per=8)
+    cm = CostModel(alpha=1.0, beta=0.001, conv_attention=True)
+    ident = identity_rearrangement(lens, d)
+    pi = post_balance(lens, d, cm)
+    assert max(cm.cost(l) for l in pi.dest_lengths()) <= max(
+        cm.cost(l) for l in ident.dest_lengths()
+    )
+
+
+def test_policy_dispatch():
+    lens = [np.array([3, 4]), np.array([5])]
+    assert post_balance(lens, 2, CostModel(padding=True)).n == 3
+    assert post_balance(lens, 2, CostModel(beta=0.5)).n == 3
+    assert post_balance(lens, 2, CostModel(conv_attention=True, beta=0.1)).n == 3
+    assert post_balance(lens, 2, CostModel()).n == 3
+    with pytest.raises(ValueError):
+        post_balance(lens, 2, CostModel(), algorithm="bogus")
+
+
+def test_empty_and_degenerate():
+    cm = CostModel()
+    pi = post_balance([np.array([], dtype=int), np.array([], dtype=int)], 2, cm)
+    assert pi.n == 0
+    pi = post_balance([np.array([5])], 1, cm)
+    assert pi.n == 1 and pi.dest_lengths()[0].tolist() == [5]

@@ -1,0 +1,104 @@
+"""Communicator tests.
+
+Plan-construction tests run in-process (host-only numpy); the actual
+multi-device exchange (ragged all-to-all under shard_map on 8 fake host
+devices) runs in a subprocess because the device count must be fixed
+before JAX initializes.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.balancing import post_balance
+from repro.core.communicator import build_comm_plan, plan_to_device
+from repro.core.cost_model import CostModel
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _plan(seed=0, d=4):
+    rng = np.random.default_rng(seed)
+    lens = [rng.integers(1, 30, size=rng.integers(1, 5)) for _ in range(d)]
+    pi = post_balance(lens, d, CostModel())
+    cap_in = int(max(l.sum() for l in lens))
+    cap_out = int(max(l.sum() for l in pi.dest_lengths()) or 1)
+    return pi, build_comm_plan(pi, cap_in, cap_out)
+
+
+def test_plan_shapes_and_conservation():
+    pi, plan = _plan()
+    d = plan.d
+    assert plan.send_sizes.shape == (d, d)
+    # Token conservation: everything sent is received.
+    assert plan.send_sizes.sum() == pi.lengths.sum()
+    assert (plan.recv_sizes.T == plan.send_sizes).all()
+    # Per-destination received tokens == destination batch tokens.
+    dest_tokens = np.array([l.sum() for l in pi.dest_lengths()])
+    assert (plan.recv_sizes.sum(axis=1) == dest_tokens).all()
+    # post_mask count matches.
+    assert plan.post_mask.sum() == pi.lengths.sum()
+
+
+def test_plan_offsets_are_contiguous():
+    _, plan = _plan(seed=1)
+    d = plan.d
+    for s in range(d):
+        off = 0
+        for t in range(d):
+            assert plan.input_offsets[s, t] == off
+            off += plan.send_sizes[s, t]
+    for t in range(d):
+        off = 0
+        for s in range(d):
+            assert plan.output_offsets[s, t] == off
+            off += plan.send_sizes[s, t]
+
+
+def test_plan_rejects_small_capacity():
+    rng = np.random.default_rng(2)
+    lens = [rng.integers(10, 30, size=4) for _ in range(4)]
+    pi = post_balance(lens, 4, CostModel())
+    with pytest.raises(ValueError):
+        build_comm_plan(pi, 8, 10_000)
+    with pytest.raises(ValueError):
+        build_comm_plan(pi, 10_000, 8)
+
+
+def test_comm_bytes_accounting():
+    _, plan = _plan(seed=3)
+    b = plan.comm_bytes(bytes_per_token=2)
+    assert b["ragged"] <= b["a2a_dense"] <= b["allgather"]
+    # Eq. 3 vs 4 structure: allgather is (d-1) * cap * d tokens.
+    assert b["allgather"] == plan.d * (plan.d - 1) * plan.cap_in * 2
+
+
+def test_plan_to_device_keys():
+    _, plan = _plan(seed=4)
+    arrays = plan_to_device(plan)
+    assert set(arrays) == {
+        "pre_gather", "input_offsets", "send_sizes", "output_offsets",
+        "recv_sizes", "post_gather", "post_mask", "global_gather",
+        "pre_gather_dense", "post_gather_dense",
+    }
+    d = plan.d
+    assert arrays["pre_gather_dense"].shape == (d, d * plan.chunk_cap)
+
+
+@pytest.mark.slow
+def test_multidevice_exchange_subprocess():
+    """End-to-end 8-device ragged-all-to-all vs numpy oracle."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    res = subprocess.run(
+        [sys.executable, str(REPO / "tests/helpers/communicator_check.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"

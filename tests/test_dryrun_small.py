@@ -1,0 +1,25 @@
+"""Miniature dry-run (subprocess, 8 host devices): param/batch/cache
+shardings + lower + compile + roofline extraction, single- and
+multi-pod-style meshes, across families.  The production 512-device
+dry-run (launch/dryrun.py) runs the same machinery at full scale."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_dryrun_small_all_families():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src") + ":" + str(REPO)
+    res = subprocess.run(
+        [sys.executable, str(REPO / "tests/helpers/dryrun_small_check.py")],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr[-3000:]}"
+    assert res.stdout.count("ok ") >= 18  # 9 (arch, kind) pairs x 2 meshes

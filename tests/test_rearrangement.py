@@ -1,0 +1,112 @@
+"""Tests for Rearrangement representation, inverse, composition (paper S6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.balancing import post_balance
+from repro.core.cost_model import CostModel
+from repro.core.rearrangement import Rearrangement, compose, identity_rearrangement
+
+
+def _pi_from_perm(perm, lengths):
+    """A simple d=len(perm) rearrangement sending example i (1 per inst) to perm[i]."""
+    d = len(perm)
+    batches = [[] for _ in range(d)]
+    for i, p in enumerate(perm):
+        batches[p].append((i, 0, lengths[i]))
+    return Rearrangement.from_batches(batches, d)
+
+
+def test_identity():
+    lens = [np.array([3, 4]), np.array([5])]
+    pi = identity_rearrangement(lens, 2)
+    assert pi.self_volume() == 12
+    V = pi.comm_matrix()
+    assert V[0, 0] == 7 and V[1, 1] == 5 and V[0, 1] == 0
+
+
+def test_inverse_roundtrip():
+    rng = np.random.default_rng(0)
+    lens = [rng.integers(1, 50, size=4) for _ in range(6)]
+    pi = post_balance(lens, 6, CostModel())
+    inv = pi.inverse()
+    # inverse sends each payload back: src of inv == dst of pi.
+    assert (inv.src_inst == pi.dst_inst).all()
+    assert (inv.dst_inst == pi.src_inst).all()
+
+
+def test_compose_direct_path():
+    """compose(pi_m, pi_e) must equal 'undo pi_e then apply pi_m'."""
+    lengths = [10, 20, 30, 40]
+    pi_e = _pi_from_perm([2, 3, 0, 1], lengths)
+    pi_m = _pi_from_perm([1, 0, 3, 2], lengths)
+    comp = compose(pi_m, pi_e)
+    # Example i currently lives at pi_e dst; composed src must match.
+    for k in range(comp.n):
+        oi = int(comp.orig_inst[k])
+        e = int(np.where(pi_e.orig_inst == oi)[0][0])
+        m = int(np.where(pi_m.orig_inst == oi)[0][0])
+        assert comp.src_inst[k] == pi_e.dst_inst[e]
+        assert comp.dst_inst[k] == pi_m.dst_inst[m]
+
+
+def test_compose_halves_volume_vs_two_hops():
+    """Rearrangement Composition (paper S6) merges two all-to-alls into one:
+    composed volume <= inverse-volume + forward-volume."""
+    rng = np.random.default_rng(1)
+    d = 8
+    enc_lens = [rng.integers(10, 100, size=5) for _ in range(d)]
+    pi_e = post_balance(enc_lens, d, CostModel())
+    # The backbone plan balances a different metric (interleaved length):
+    llm_lens = [l + rng.integers(1, 50, size=l.shape) for l in enc_lens]
+    pi_m = post_balance(llm_lens, d, CostModel(beta=1e-4), algorithm="quad")
+    # Composition must still track the *encoder* payload lengths.
+    comp = compose(pi_m, pi_e)
+    assert sorted(comp.lengths.tolist()) == sorted(pi_e.lengths.tolist())
+    two_hop = pi_e.inverse().comm_matrix().sum() + pi_e.lengths.sum()
+    one_hop = comp.comm_matrix().sum()
+    assert one_hop <= two_hop
+
+
+def test_permute_destinations_objective_invariant():
+    rng = np.random.default_rng(2)
+    d = 4
+    lens = [rng.integers(1, 40, size=3) for _ in range(d)]
+    cm = CostModel()
+    pi = post_balance(lens, d, cm)
+    before = sorted(cm.cost(l) for l in pi.dest_lengths())
+    perm = np.array([2, 0, 3, 1])
+    pi2 = pi.permute_destinations(perm)
+    after = sorted(cm.cost(l) for l in pi2.dest_lengths())
+    assert np.allclose(before, after)
+    with pytest.raises(ValueError):
+        pi.permute_destinations(np.array([0, 0, 1, 2]))
+
+
+@given(st.permutations(list(range(6))))
+@settings(max_examples=20, deadline=None)
+def test_property_compose_with_self_inverse_is_src_stationary(perm):
+    lengths = list(range(10, 70, 10))
+    pi = _pi_from_perm(list(perm), lengths)
+    comp = compose(pi, pi)  # pi o pi^{-1} = identity motion
+    assert (comp.src_inst == comp.dst_inst).all()
+    assert comp.comm_matrix().trace() == sum(lengths)
+
+
+def test_internode_volume_accounting():
+    # 4 instances, 2 per node; everything sent cross-node.
+    pi = _pi_from_perm([2, 3, 0, 1], [10, 10, 10, 10])
+    v = pi.internode_volume(2)
+    assert v.tolist() == [10, 10, 10, 10]
+    # Identity: zero inter-node.
+    pi_id = _pi_from_perm([0, 1, 2, 3], [10, 10, 10, 10])
+    assert pi_id.internode_volume(2).sum() == 0
+
+
+def test_compose_rejects_mismatched_examples():
+    pi_a = _pi_from_perm([1, 0], [5, 6])
+    batches = [[(0, 0, 5)], [(1, 1, 6)]]  # slot mismatch
+    pi_b = Rearrangement.from_batches(batches, 2)
+    with pytest.raises(KeyError):
+        compose(pi_a, pi_b)
