@@ -54,36 +54,6 @@ def orchestrate(arch, d, per, *, balance=True, balance_encoders=True,
 
 def plan_only(orch: MLLMGlobalOrchestrator, examples):
     """Run dispatchers + composition without array packing."""
-    import dataclasses
-    import time as _t
-
-    import numpy as _np
-
-    from repro.core.rearrangement import compose
-    from repro.core.orchestrator import _remap_subset_slots
-
-    cfg = orch.cfg
-    t0 = _t.perf_counter()
-    key = "text" if cfg.family == "audio" else "total"
-    llm_lengths = [
-        _np.array([ex.text_len if key == "text" else ex.total_len(orch.downsample)
-                   for ex in insts], _np.int64)
-        for insts in examples
-    ]
-    llm_plan = orch.llm_dispatcher.plan(llm_lengths)
-    enc_plans, composed = {}, {}
-    for e in cfg.encoders:
-        lens = [
-            _np.array([getattr(ex, f"{e.name}_meta") for ex in insts
-                       if getattr(ex, f"{e.name}_meta") > 0], _np.int64)
-            for insts in examples
-        ]
-        plan = orch.enc_dispatchers[e.name].plan(lens)
-        enc_plans[e.name] = plan
-        pi_e = _remap_subset_slots(plan.pi, examples, e.name)
-        comp = compose(llm_plan.pi, pi_e)
-        comp = dataclasses.replace(
-            comp, lengths=_np.ceil(comp.lengths / e.downsample).astype(_np.int64))
-        composed[e.name] = comp
-    solve_ms = (_t.perf_counter() - t0) * 1e3
-    return orch._report(llm_plan, enc_plans, composed, solve_ms)
+    plans = orch.plan_phases(examples)
+    return orch._report(plans.llm_plan, plans.enc_plans, plans.composed,
+                        plans.solve_ms, phase_solve_ms=plans.phase_solve_ms)

@@ -1,0 +1,194 @@
+"""Dispatcher-latency benchmark: python vs vectorized post-balancing.
+
+Times all four Post-Balancing algorithms through ``post_balance`` for
+both backends over n (total examples) x d (DP instances) grids, asserts
+objective parity while doing so, and runs the plan-ahead overlap harness
+(a dry-run training loop with a simulated forward pass) to measure how
+much dispatcher host time stays exposed on the critical path.
+
+    PYTHONPATH=src python -m benchmarks.dispatch_latency [--smoke] \
+        [--out BENCH_dispatch.json]
+
+The committed ``BENCH_dispatch.json`` is the full run; CI re-runs the
+``--smoke`` grid on every push.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")  # allow `python -m benchmarks.dispatch_latency`
+
+from repro.core.balancing import post_balance
+from repro.core.cost_model import CostModel
+
+FULL_NS = (256, 1024, 4096, 16384)
+FULL_DS = (8, 64, 256)
+SMOKE_NS = (256, 1024)
+SMOKE_DS = (8, 64)
+
+ALGOS = {
+    "nopad": CostModel(alpha=1.0, beta=0.0),
+    "pad": CostModel(alpha=1.0, beta=1e-4, padding=True),
+    "quad": CostModel(alpha=1.0, beta=1e-3),
+    "conv": CostModel(alpha=1.0, beta=1e-3, conv_attention=True),
+}
+
+
+def _lengths(rng: np.random.Generator, n: int, d: int) -> list[np.ndarray]:
+    """Heavy-tailed per-instance lengths (lognormal, the MLLM regime)."""
+    per = max(1, n // d)
+    return [(rng.lognormal(5.5, 0.8, size=per).astype(np.int64) + 1)
+            for _ in range(d)]
+
+
+def _timed(fn, repeat: int) -> float:
+    best = np.inf
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3  # ms
+
+
+def _max_cost(pi, cm: CostModel) -> float:
+    return float(cm.segment_costs(pi.lengths, pi.dst_inst, pi.d).max())
+
+
+def bench_backends(ns, ds, repeat: int) -> list[dict]:
+    rows = []
+    for n in ns:
+        for d in ds:
+            if n < d:
+                continue
+            rng = np.random.default_rng(hash((n, d)) % (2**32))
+            lens = _lengths(rng, n, d)
+            for algo, cm in ALGOS.items():
+                pi_py = post_balance(lens, d, cm, algorithm=algo,
+                                     backend="python")
+                pi_vec = post_balance(lens, d, cm, algorithm=algo,
+                                      backend="vectorized")
+                mc_py, mc_vec = _max_cost(pi_py, cm), _max_cost(pi_vec, cm)
+                assert abs(mc_py - mc_vec) <= 1e-9 * max(abs(mc_py), 1.0), (
+                    f"objective mismatch {algo} n={n} d={d}: "
+                    f"python={mc_py} vectorized={mc_vec}")
+                t_py = _timed(
+                    lambda: post_balance(lens, d, cm, algorithm=algo,
+                                         backend="python"), repeat)
+                t_vec = _timed(
+                    lambda: post_balance(lens, d, cm, algorithm=algo,
+                                         backend="vectorized"), repeat)
+                rows.append({
+                    "n": n, "d": d, "algorithm": algo,
+                    "python_ms": round(t_py, 3),
+                    "vectorized_ms": round(t_vec, 3),
+                    "speedup": round(t_py / t_vec, 2),
+                    "max_cost_match": True,
+                })
+                print(f"n={n:6d} d={d:4d} {algo:5s}  "
+                      f"python {t_py:8.2f} ms  vectorized {t_vec:7.2f} ms  "
+                      f"{t_py / t_vec:6.1f}x", flush=True)
+    return rows
+
+
+def bench_overlap(steps: int, forward_ms: float, d: int, per: int) -> dict:
+    """Dry-run overlap harness: PrefetchingLoader in plan-ahead mode vs a
+    simulated forward pass; exposed dispatcher latency should be ~0."""
+    from repro.configs import get_config
+    from repro.core.orchestrator import MLLMGlobalOrchestrator
+    from repro.data.pipeline import PrefetchingLoader
+    from repro.data.synthetic import sample_examples
+
+    cfg = get_config("mllm_10b").smoke()
+    orch = MLLMGlobalOrchestrator(cfg, d, vocab=256, concurrent_dispatch=True)
+    rng = np.random.default_rng(0)
+    probe = [sample_examples(rng, per) for _ in range(d)]
+    # Generous margin so pathological draws don't trigger resampling
+    # mid-measurement (a resample restarts that step's plan cold).
+    caps = orch.default_capacities(probe, margin=6.0)
+    loader = PrefetchingLoader(orch, caps, examples_per_instance=per,
+                               seed=1, plan_ahead=True)
+    solve, exposed = [], []
+    try:
+        for _ in range(steps):
+            batch, report, _ = next(loader)
+            solve.append(report.solve_ms)
+            exposed.append(report.exposed_ms)
+            time.sleep(forward_ms / 1e3)  # the "forward pass"
+    finally:
+        loader.close()
+    # Step 0 has no previous step to hide behind -- report it apart from
+    # the steady state the acceptance criterion is about.
+    ss_solve, ss_exposed = solve[1:] or solve, exposed[1:] or exposed
+    out = {
+        "steps": steps,
+        "forward_ms": forward_ms,
+        "warmup_exposed_ms": round(float(exposed[0]), 3),
+        "mean_solve_ms": round(float(np.mean(ss_solve)), 3),
+        "mean_exposed_ms": round(float(np.mean(ss_exposed)), 3),
+        "hidden_fraction": round(
+            1.0 - float(np.sum(ss_exposed)) / max(float(np.sum(ss_solve)), 1e-9),
+            4),
+        "loader_stats": {k: round(v, 3) for k, v in
+                         loader.overlap_stats().items()},
+    }
+    print(f"overlap: solve {out['mean_solve_ms']:.2f} ms/step, exposed "
+          f"{out['mean_exposed_ms']:.3f} ms/step steady-state "
+          f"({out['hidden_fraction']*100:.1f}% hidden; warmup step "
+          f"{out['warmup_exposed_ms']:.2f} ms)", flush=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid + short overlap run (CI)")
+    ap.add_argument("--out", default="BENCH_dispatch.json")
+    ap.add_argument("--repeat", type=int, default=None)
+    args = ap.parse_args()
+
+    ns, ds = (SMOKE_NS, SMOKE_DS) if args.smoke else (FULL_NS, FULL_DS)
+    repeat = args.repeat or (3 if args.smoke else 10)
+    rows = bench_backends(ns, ds, repeat)
+
+    # Headline: aggregate dispatcher latency at the largest grid point.
+    n_h, d_h = max(ns), max(ds)
+    head = [r for r in rows if r["n"] == n_h and r["d"] == d_h]
+    agg_py = sum(r["python_ms"] for r in head)
+    agg_vec = sum(r["vectorized_ms"] for r in head)
+    # Forward time is a stand-in for the device step; the paper's regime
+    # has forward >> solve (Table 2: <= 54 ms solve vs multi-second
+    # steps), so 150 ms already over-represents the dispatcher's share.
+    overlap = bench_overlap(steps=4 if args.smoke else 12,
+                            forward_ms=60.0 if args.smoke else 150.0,
+                            d=8 if args.smoke else 16,
+                            per=4 if args.smoke else 8)
+    result = {
+        "benchmark": "dispatch_latency",
+        "distribution": "lognormal(5.5, 0.8)",
+        "repeat": repeat,
+        "rows": rows,
+        "headline": {
+            "n": n_h, "d": d_h,
+            "aggregate_python_ms": round(agg_py, 2),
+            "aggregate_vectorized_ms": round(agg_vec, 2),
+            "aggregate_speedup": round(agg_py / agg_vec, 2),
+            "per_algorithm_speedup": {r["algorithm"]: r["speedup"]
+                                      for r in head},
+        },
+        "overlap": overlap,
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+        f.write("\n")
+    print(f"headline @ n={n_h} d={d_h}: aggregate "
+          f"{agg_py:.1f} -> {agg_vec:.1f} ms "
+          f"({agg_py / agg_vec:.1f}x); wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,21 +6,30 @@ minimizing (approximately) ``max_i f(S'_i)`` for the phase's cost model.
 
   - :func:`post_balance_nopad`   Alg 1: LPT greedy, 4/3-approx, O(n log n)
   - :func:`post_balance_pad`     Alg 2: binary search + first-fit, O(n log nC)
-  - :func:`post_balance_quad`    Alg 3: tolerance-interval greedy (beta not << alpha)
+  - :func:`post_balance_quad`    Alg 3: quadratic objective (beta not << alpha)
   - :func:`post_balance_conv`    Alg 4: ConvTransformer objective
   - :func:`post_balance`         policy dispatch from a :class:`CostModel`
   - :func:`brute_force_oracle`   exact minimizer for tests (tiny n, d)
+
+Two backends implement the same algorithms:
+
+  - ``backend="python"``     the per-item heapq loops below -- the
+    readable reference path, kept for equivalence testing;
+  - ``backend="vectorized"`` the chunked NumPy engine in
+    :mod:`repro.core.balancing_vec`, exactly equivalent (same
+    assignments, not just the same objective) and 10-100x faster at
+    production sizes.  This is the default.
 
 The returned object is a :class:`~repro.core.rearrangement.Rearrangement`.
 """
 from __future__ import annotations
 
 import heapq
-import itertools
 from typing import Sequence
 
 import numpy as np
 
+from repro.core import balancing_vec as _vec
 from repro.core.cost_model import CostModel
 from repro.core.rearrangement import Rearrangement
 
@@ -31,8 +40,12 @@ __all__ = [
     "post_balance_quad",
     "post_balance_conv",
     "post_balance",
+    "select_algorithm",
     "brute_force_oracle",
+    "BACKENDS",
 ]
+
+BACKENDS = ("python", "vectorized")
 
 Item = tuple[int, int, int]  # (src_inst, src_slot, length)
 
@@ -61,10 +74,13 @@ def _to_rearrangement(batches: list[list[Item]], d: int) -> Rearrangement:
 # ----------------------------------------------------------------------
 # Algorithm 1: Post-Balancing without paddings (LPT greedy).
 # ----------------------------------------------------------------------
-def post_balance_nopad(items: Sequence[Item], d: int) -> Rearrangement:
+def post_balance_nopad(items: Sequence[Item], d: int, *,
+                       backend: str = "python") -> Rearrangement:
     """Paper Algorithm 1.  Sort descending, push each onto the batch with
     the smallest running token sum (priority queue).  4/3-approximation
     of the makespan objective ``min max_i L'_i``."""
+    if backend == "vectorized":
+        return _vec.nopad_vec(*_vec.items_to_arrays(items), d)
     heap: list[tuple[int, int]] = [(0, i) for i in range(d)]  # (sum, batch_idx)
     heapq.heapify(heap)
     batches: list[list[Item]] = [[] for _ in range(d)]
@@ -90,9 +106,12 @@ def _least_batches_under_bound(sorted_asc: list[Item], bound: int) -> list[list[
     return batches
 
 
-def post_balance_pad(items: Sequence[Item], d: int) -> Rearrangement:
+def post_balance_pad(items: Sequence[Item], d: int, *,
+                     backend: str = "python") -> Rearrangement:
     """Paper Algorithm 2: binary-search the smallest padded-batch-length
     bound for which first-fit packing needs <= d batches."""
+    if backend == "vectorized":
+        return _vec.pad_vec(*_vec.items_to_arrays(items), d)
     if not items:
         return _to_rearrangement([], d)
     asc = _sorted_asc(items)
@@ -129,36 +148,70 @@ class _QuadBatch:
 
 
 def post_balance_quad(
-    items: Sequence[Item], d: int, *, tolerance: float | None = None, lam: float = 0.0
+    items: Sequence[Item],
+    d: int,
+    *,
+    tolerance: float | None = None,
+    lam: float = 0.0,
+    method: str = "effective",
+    backend: str = "python",
 ) -> Rearrangement:
     """Paper Algorithm 3 ('Post-Balancing Algorithm 3rd').
 
-    ``tolerance`` is the paper's manually-set interval v; default scales
-    with the mean item length.  ``lam`` is only used for the default
-    tolerance heuristic.
+    Objective: min max_i  L'_i + lam * sum_j l'_{i,j}^2.
+
+    ``method="effective"`` (default) is LPT greedy on the *effective
+    weight* w = l + lam*l^2: assigning an item raises its batch's
+    objective by exactly w, so greedy-on-resulting-cost IS plain LPT on
+    w -- the clean reduction the paper's tolerance comparator
+    approximates.  ``method="tolerance"`` keeps the paper-faithful heap
+    CMP (balance L first, break near-ties by sum of squares);
+    ``tolerance`` is its manually-set interval v, defaulting to a
+    mean-length heuristic.  Passing ``tolerance`` explicitly selects
+    the tolerance method (it has no meaning for the effective method).
+    Only the effective method has a vectorized backend.
     """
+    if tolerance is not None and method == "effective":
+        method = "tolerance"
+    if method == "effective":
+        if backend == "vectorized":
+            return _vec.quad_vec(*_vec.items_to_arrays(items), d, lam=lam)
+        heap: list[tuple[float, int]] = [(0.0, i) for i in range(d)]
+        heapq.heapify(heap)
+        batches: list[list[Item]] = [[] for _ in range(d)]
+        for it in _sorted_desc(items):
+            # Precompute w so float accumulation order matches the
+            # vectorized engine exactly (loads stay bit-identical).
+            w = it[2] + lam * float(it[2]) ** 2
+            total, idx = heapq.heappop(heap)
+            batches[idx].append(it)
+            heapq.heappush(heap, (total + w, idx))
+        return _to_rearrangement(batches, d)
+    if method != "tolerance":
+        raise ValueError(f"unknown quad method {method!r}")
     if not items:
         return _to_rearrangement([], d)
     if tolerance is None:
         mean_len = float(np.mean([it[2] for it in items]))
         tolerance = max(1.0, mean_len * (0.5 if lam > 0 else 0.1))
-    heap = [_QuadBatch(i, tolerance) for i in range(d)]
-    heapq.heapify(heap)
-    batches: list[list[Item]] = [[] for _ in range(d)]
+    theap = [_QuadBatch(i, tolerance) for i in range(d)]
+    heapq.heapify(theap)
+    tbatches: list[list[Item]] = [[] for _ in range(d)]
     for it in _sorted_desc(items):
-        top = heapq.heappop(heap)
-        batches[top.idx].append(it)
+        top = heapq.heappop(theap)
+        tbatches[top.idx].append(it)
         top.lsum += it[2]
         top.sqsum += it[2] * it[2]
-        heapq.heappush(heap, top)
-    return _to_rearrangement(batches, d)
+        heapq.heappush(theap, top)
+    return _to_rearrangement(tbatches, d)
 
 
 # ----------------------------------------------------------------------
 # Algorithm 4 (App. A): ConvTransformer objective.
 # Objective: min max_i  L'_i + lambda * b_i * max_j(l'_{i,j})^2
 # ----------------------------------------------------------------------
-def post_balance_conv(items: Sequence[Item], d: int) -> Rearrangement:
+def post_balance_conv(items: Sequence[Item], d: int, *,
+                      backend: str = "python") -> Rearrangement:
     """Paper Algorithm 4 ('Post-Balancing Algorithm 4th').
 
     First bound the padded term: pack descending under the bound given by
@@ -166,6 +219,8 @@ def post_balance_conv(items: Sequence[Item], d: int) -> Rearrangement:
     batch stays near the balanced linear cost), stopping once d batches
     are open; then distribute the remainder LPT-style by running sums.
     """
+    if backend == "vectorized":
+        return _vec.conv_vec(*_vec.items_to_arrays(items), d)
     if not items:
         return _to_rearrangement([], d)
     desc = _sorted_desc(items)
@@ -199,18 +254,9 @@ def post_balance_conv(items: Sequence[Item], d: int) -> Rearrangement:
 # ----------------------------------------------------------------------
 # Policy dispatch + exact oracle.
 # ----------------------------------------------------------------------
-def post_balance(
-    lengths_per_instance: Sequence[np.ndarray],
-    d: int,
-    cost_model: CostModel,
-    *,
-    algorithm: str | None = None,
-) -> Rearrangement:
-    """Select and run the Post-Balancing algorithm for a phase.
-
-    ``algorithm`` overrides the policy: one of
-    {"nopad", "pad", "quad", "conv"}.  Default policy (paper S5.1/S7
-    'selected according to the specified balance policy'):
+def select_algorithm(cost_model: CostModel, lmax: int) -> str:
+    """The balance policy (paper S5.1/S7 'selected according to the
+    specified balance policy'):
 
       conv_attention -> Alg 4;  padding -> Alg 2;
       quadratic term material for the longest example
@@ -220,15 +266,48 @@ def post_balance(
     cutoff: with heavy-tailed lengths, beta*l^2 of a single long example
     dominates its bin even when beta/alpha is tiny.
     """
+    if cost_model.conv_attention:
+        return "conv"
+    if cost_model.padding:
+        return "pad"
+    return "quad" if cost_model.lam * lmax >= 0.05 else "nopad"
+
+
+def post_balance(
+    lengths_per_instance: Sequence[np.ndarray],
+    d: int,
+    cost_model: CostModel,
+    *,
+    algorithm: str | None = None,
+    backend: str = "vectorized",
+) -> Rearrangement:
+    """Select and run the Post-Balancing algorithm for a phase.
+
+    ``algorithm`` overrides the policy (see :func:`select_algorithm`):
+    one of {"nopad", "pad", "quad", "conv"}.  ``backend`` picks the
+    implementation: "vectorized" (default) or the "python" heapq
+    reference.  Both produce identical rearrangements.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if backend == "vectorized":
+        inst, slot, length = _vec.arrays_from_instance_lengths(lengths_per_instance)
+        if algorithm is None:
+            lmax = int(length.max()) if length.size else 0
+            algorithm = select_algorithm(cost_model, lmax)
+        if algorithm == "nopad":
+            return _vec.nopad_vec(inst, slot, length, d)
+        if algorithm == "pad":
+            return _vec.pad_vec(inst, slot, length, d)
+        if algorithm == "quad":
+            return _vec.quad_vec(inst, slot, length, d, lam=cost_model.lam)
+        if algorithm == "conv":
+            return _vec.conv_vec(inst, slot, length, d)
+        raise ValueError(f"unknown balancing algorithm {algorithm!r}")
     items = flatten_instance_lengths(lengths_per_instance)
     if algorithm is None:
-        if cost_model.conv_attention:
-            algorithm = "conv"
-        elif cost_model.padding:
-            algorithm = "pad"
-        else:
-            lmax = max((it[2] for it in items), default=0)
-            algorithm = "quad" if cost_model.lam * lmax >= 0.05 else "nopad"
+        lmax = max((it[2] for it in items), default=0)
+        algorithm = select_algorithm(cost_model, lmax)
     if algorithm == "nopad":
         return post_balance_nopad(items, d)
     if algorithm == "pad":
@@ -241,17 +320,34 @@ def post_balance(
 
 
 def brute_force_oracle(
-    lengths_per_instance: Sequence[np.ndarray], d: int, cost_model: CostModel
+    lengths_per_instance: Sequence[np.ndarray],
+    d: int,
+    cost_model: CostModel,
+    *,
+    chunk: int = 1 << 15,
 ) -> float:
-    """Exact optimal max-cost via exhaustive assignment (tests only)."""
+    """Exact optimal max-cost via exhaustive assignment (tests only).
+
+    Enumerates all d^n assignments in mixed-radix chunks and prices each
+    chunk with the batched objective evaluator
+    (:meth:`CostModel.assignment_costs`) -- one bincount per chunk
+    instead of d^n * d python ``cost()`` calls.
+    """
     items = flatten_instance_lengths(lengths_per_instance)
     n = len(items)
     if n > 12:
         raise ValueError("oracle is exponential; use n <= 12")
+    if n == 0:
+        return 0.0
+    total = d**n
+    if total > 10**8:
+        raise ValueError(f"oracle would enumerate {total} assignments; shrink n or d")
+    lens = np.array([it[2] for it in items], dtype=np.float64)
+    radix = d ** np.arange(n, dtype=np.int64)
     best = np.inf
-    for assign in itertools.product(range(d), repeat=n):
-        batches: list[list[int]] = [[] for _ in range(d)]
-        for it, a in zip(items, assign):
-            batches[a].append(it[2])
-        best = min(best, max(cost_model.cost(b) for b in batches))
+    for start in range(0, total, chunk):
+        codes = np.arange(start, min(start + chunk, total), dtype=np.int64)
+        assigns = (codes[:, None] // radix) % d
+        costs = cost_model.assignment_costs(lens, assigns, d)
+        best = min(best, float(costs.max(axis=1).min()))
     return float(best)

@@ -11,21 +11,31 @@ The dispatcher is the per-phase unit that
      communicator needs to perform the payload all-to-all with STATIC
      shapes (per-shard token capacity), plus bookkeeping for
      EXPERIMENTS.md-style accounting.
+
+Plan-ahead mode (paper S6, 'computation overhead overlapping'): the
+dispatcher computation needs only lengths, which are known as soon as
+mini-batches are sampled -- so :meth:`submit` hands the solve to a
+background worker (bounded queue, one worker per dispatcher, mirroring
+the paper's one-dispatcher-per-modality concurrency) and returns a
+:class:`PlanTicket`; the caller collects ``ticket.result()`` a step
+later, after the forward pass has hidden the host time.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 from typing import Sequence
 
 import numpy as np
 
 from repro.core.balancing import post_balance
-from repro.core.cost_model import CostModel
+from repro.core.cost_model import CostModel, _segment_max
 from repro.core.nodewise import nodewise_rearrange
 from repro.core.rearrangement import Rearrangement, identity_rearrangement
 
-__all__ = ["DispatchPlan", "BatchPostBalancingDispatcher"]
+__all__ = ["DispatchPlan", "PlanTicket", "BatchPostBalancingDispatcher"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -56,6 +66,31 @@ class DispatchPlan:
         return float(self.costs.max()) if self.costs.size else 0.0
 
 
+class PlanTicket:
+    """Handle for a plan computed on the dispatcher's worker thread."""
+
+    def __init__(self) -> None:
+        self._done = threading.Event()
+        self._plan: DispatchPlan | None = None
+        self._error: BaseException | None = None
+
+    def _set(self, plan: DispatchPlan | None, error: BaseException | None) -> None:
+        self._plan = plan
+        self._error = error
+        self._done.set()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: float | None = None) -> DispatchPlan:
+        if not self._done.wait(timeout):
+            raise TimeoutError("dispatcher plan not ready")
+        if self._error is not None:
+            raise self._error
+        assert self._plan is not None
+        return self._plan
+
+
 class BatchPostBalancingDispatcher:
     """One dispatcher per phase (paper Fig. 4).
 
@@ -69,6 +104,8 @@ class BatchPostBalancingDispatcher:
         (TPU lane alignment; 128 aligns the MXU).
       balance: False -> identity plan (the paper's 'OrchMLLM w/o balance'
         baseline).
+      backend: "vectorized" (default) or "python" post-balancing engine.
+      queue_depth: bound on in-flight plan-ahead submissions.
     """
 
     def __init__(
@@ -82,6 +119,8 @@ class BatchPostBalancingDispatcher:
         within_node: bool = True,
         pad_to: int = 128,
         balance: bool = True,
+        backend: str = "vectorized",
+        queue_depth: int = 2,
     ) -> None:
         self.d = d
         self.cost_model = cost_model
@@ -91,12 +130,19 @@ class BatchPostBalancingDispatcher:
         self.within_node = within_node
         self.pad_to = pad_to
         self.balance = balance
+        self.backend = backend
+        self.queue_depth = queue_depth
+        self._work: queue.Queue | None = None
+        self._worker: threading.Thread | None = None
+        self._lock = threading.Lock()
 
+    # ------------------------------------------------------------------
     def plan(self, lengths_per_instance: Sequence[np.ndarray]) -> DispatchPlan:
         t0 = time.perf_counter()
         if self.balance:
             pi = post_balance(
-                lengths_per_instance, self.d, self.cost_model, algorithm=self.algorithm
+                lengths_per_instance, self.d, self.cost_model,
+                algorithm=self.algorithm, backend=self.backend,
             )
             if self.instances_per_node and self.instances_per_node < self.d:
                 pi = nodewise_rearrange(
@@ -107,25 +153,71 @@ class BatchPostBalancingDispatcher:
                 )
         else:
             pi = identity_rearrangement(lengths_per_instance, self.d)
-        solve_ms = (time.perf_counter() - t0) * 1e3
 
-        dest_lengths = pi.dest_lengths()
+        # Batched accounting: per-shard sums/counts/maxima in O(n) numpy
+        # instead of a python loop over d ragged arrays.
+        lens = np.asarray(pi.lengths, dtype=np.float64)
+        ids = pi.dst_inst
+        costs = self.cost_model.segment_costs(lens, ids, self.d)
         if self.cost_model.padding or self.cost_model.conv_attention:
-            per_shard_tokens = [
-                int(l.size * l.max()) if l.size else 0 for l in dest_lengths
-            ]
+            cnt = np.bincount(ids, minlength=self.d)
+            bmax = _segment_max(lens, ids, self.d)
+            per_shard_max = int((cnt * bmax).max()) if cnt.size else 0
         else:
-            per_shard_tokens = [int(l.sum()) for l in dest_lengths]
-        cap = _round_up(max(per_shard_tokens, default=0) or self.pad_to, self.pad_to)
-        costs = np.array([self.cost_model.cost(l) for l in dest_lengths])
+            bsum = np.bincount(ids, weights=lens, minlength=self.d)
+            per_shard_max = int(bsum.max()) if bsum.size else 0
+        cap = _round_up(per_shard_max or self.pad_to, self.pad_to)
         maxc = costs.max() if costs.size else 0.0
         util = float(costs.mean() / maxc) if maxc > 0 else 1.0
+        solve_ms = (time.perf_counter() - t0) * 1e3
         return DispatchPlan(
             pi=pi,
             d=self.d,
             token_capacity=cap,
-            dest_lengths=dest_lengths,
+            dest_lengths=pi.dest_lengths(),
             costs=costs,
             utilization=util,
             solve_ms=solve_ms,
         )
+
+    # -- plan-ahead mode ------------------------------------------------
+    def _drain(self, work: queue.Queue) -> None:
+        while True:
+            item = work.get()
+            if item is None:
+                return
+            lengths, ticket = item
+            try:
+                ticket._set(self.plan(lengths), None)
+            except BaseException as e:  # propagate to result()
+                ticket._set(None, e)
+
+    def submit(self, lengths_per_instance: Sequence[np.ndarray]) -> PlanTicket:
+        """Enqueue a plan computation on the background worker.
+
+        Blocks only when ``queue_depth`` submissions are already in
+        flight (bounded queue = backpressure, same discipline as the
+        prefetching loader).
+        """
+        ticket = PlanTicket()
+        # Enqueue under the lock so close()'s shutdown sentinel is always
+        # the queue's last item -- a ticket can never land behind it and
+        # hang.  The worker drains without the lock, so a blocking put
+        # here (queue full) still makes progress.
+        with self._lock:
+            if self._worker is None or not self._worker.is_alive():
+                self._work = queue.Queue(maxsize=self.queue_depth)
+                self._worker = threading.Thread(
+                    target=self._drain, args=(self._work,),
+                    name="dispatcher-plan", daemon=True,
+                )
+                self._worker.start()
+            self._work.put((list(lengths_per_instance), ticket))
+        return ticket
+
+    def close(self) -> None:
+        """Stop the plan-ahead worker (idempotent)."""
+        with self._lock:
+            work, self._work, self._worker = self._work, None, None
+            if work is not None:
+                work.put(None)

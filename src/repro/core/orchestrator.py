@@ -19,6 +19,7 @@ via prefetching (repro.data.pipeline), exactly as S6 prescribes.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Sequence
 
@@ -42,6 +43,8 @@ def _ex_rng(seed: int, sid: int, tag: str) -> np.random.Generator:
 
 __all__ = [
     "Capacities",
+    "PhasePlans",
+    "PlanAheadHandle",
     "OrchestratorReport",
     "MLLMGlobalOrchestrator",
     "llm_cost_model",
@@ -79,6 +82,53 @@ class OrchestratorReport:
     comm_volume: dict[str, dict[str, int]]
     internode_volume: dict[str, int]
     solve_ms: float
+    # Per-phase dispatcher host time (paper Table 2 analog), keyed by
+    # phase name plus "compose" for the composition/comm-plan step.
+    phase_solve_ms: dict[str, float] = dataclasses.field(default_factory=dict)
+    # Plan-ahead accounting, filled by the pipeline/harness: host time
+    # the consumer actually waited on this plan (~0 when the previous
+    # step's forward pass hid it), and whether it was overlapped.
+    exposed_ms: float = 0.0
+    overlapped: bool = False
+
+
+@dataclasses.dataclass
+class PhasePlans:
+    """Steps 1-3 of an iteration: every phase's dispatch plan plus the
+    composed communicator plans.  Pure host work, computable from
+    lengths alone -- this is the unit plan-ahead mode overlaps with the
+    previous step's forward pass."""
+
+    llm_plan: DispatchPlan
+    enc_plans: dict[str, DispatchPlan]
+    pi_es: dict[str, Rearrangement]
+    composed: dict[str, Rearrangement]
+    comm_plans: dict[str, CommPlan]
+    phase_solve_ms: dict[str, float]
+    solve_ms: float
+
+
+class PlanAheadHandle:
+    """Future-like handle for a :meth:`plan_phases` running in the
+    background; ``result()`` also reports how long the caller blocked
+    (the *exposed* dispatcher latency)."""
+
+    def __init__(self, thread: "threading.Thread", box: dict) -> None:
+        self._thread = thread
+        self._box = box
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def result(self, timeout: float | None = None) -> tuple[PhasePlans, float]:
+        t0 = time.perf_counter()
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("plan-ahead not finished")
+        exposed_ms = (time.perf_counter() - t0) * 1e3
+        if "error" in self._box:
+            raise self._box["error"]
+        return self._box["plans"], exposed_ms
 
 
 def llm_cost_model(cfg: ModelConfig) -> CostModel:
@@ -112,6 +162,8 @@ class MLLMGlobalOrchestrator:
         llm_algorithm: str | None = None,
         encoder_algorithm_override: str | None = None,  # Fig 11 rigid-algo ablation
         vocab: int | None = None,
+        backend: str = "vectorized",
+        concurrent_dispatch: bool = False,
     ) -> None:
         self.cfg = cfg
         self.d = d
@@ -119,11 +171,16 @@ class MLLMGlobalOrchestrator:
         self.data_seed = 0
         self.instances_per_node = instances_per_node
         self.downsample = {e.name: e.downsample for e in cfg.encoders}
+        # One dispatcher per modality runs on its own worker when
+        # concurrent_dispatch is set (paper Fig. 4: per-phase dispatchers
+        # are independent).
+        self.concurrent_dispatch = concurrent_dispatch
         self.llm_dispatcher = BatchPostBalancingDispatcher(
             d, llm_cost_model(cfg),
             algorithm=llm_algorithm,
             instances_per_node=instances_per_node,
             balance=balance,
+            backend=backend,
         )
         self.enc_dispatchers: dict[str, BatchPostBalancingDispatcher] = {}
         for e in cfg.encoders:
@@ -132,6 +189,7 @@ class MLLMGlobalOrchestrator:
                 algorithm=encoder_algorithm_override,
                 instances_per_node=instances_per_node,
                 balance=balance and balance_encoders,
+                backend=backend,
             )
 
     # ------------------------------------------------------------------
@@ -143,6 +201,14 @@ class MLLMGlobalOrchestrator:
         all_ex = [ex for insts in examples_per_instance for ex in insts]
         tot_llm = sum(ex.total_len(self.downsample) for ex in all_ex)
         tot_text = sum(ex.text_len for ex in all_ex)
+        # Probe plan: observed per-peer volumes size the static a2a chunk
+        # (planning is cheap host work; a fixed d-based heuristic under-
+        # provisions when a better-balanced plan concentrates one pair).
+        probe_peer_max: dict[str, int] = {}
+        if cfg.encoders and any(dd.balance for dd in self.enc_dispatchers.values()):
+            probe = self.plan_phases(examples_per_instance)
+            for name, comp in probe.composed.items():
+                probe_peer_max[name] = int(comp.comm_matrix().max())
         llm = _round_up(int(tot_llm / self.d * margin) + 8, 128)
         text = _round_up(int(max(tot_text / self.d * margin, 1)) + 8, 128)
         enc_in, enc_out, enc_row, chunk = {}, {}, {}, {}
@@ -162,36 +228,40 @@ class MLLMGlobalOrchestrator:
                                 e.downsample * 128)
             cout = _round_up(cin // e.downsample, 128)
             enc_in[e.name], enc_out[e.name], enc_row[e.name] = cin, cout, row
-            # Balanced plans send ~cout/d per peer (2x margin for skew),
-            # but one example's tokens move to one peer atomically so the
-            # chunk must fit the largest example; unbalanced baselines
+            # Balanced plans send ~cout/d per peer (2x margin for skew)
+            # and at least 2x the probe plan's observed peer max; one
+            # example's tokens move to one peer atomically so the chunk
+            # must also fit the largest example.  Unbalanced baselines
             # keep whole batches on one pair.
             max_ex_out = -(-max(metas + [e.tokens_per_example_max]) // e.downsample)
             if self.enc_dispatchers[e.name].balance:
                 chunk[e.name] = _round_up(
-                    max(cout * 2 // max(self.d, 1), max_ex_out, 16), 8)
+                    max(cout * 2 // max(self.d, 1),
+                        2 * probe_peer_max.get(e.name, 0), max_ex_out, 16), 8)
             else:
                 chunk[e.name] = _round_up(cout, 8)
         return Capacities(llm=llm, text=text, enc_in=enc_in, enc_out=enc_out,
                           enc_row=enc_row, chunk=chunk)
 
     # ------------------------------------------------------------------
-    def plan_and_pack(
+    def plan_phases(
         self,
         examples_per_instance: Sequence[Sequence[Example]],
-        caps: Capacities,
-        rng: np.random.Generator,
-    ) -> tuple[dict[str, np.ndarray], OrchestratorReport]:
+        caps: Capacities | None = None,
+    ) -> PhasePlans:
+        """Steps 1-3: per-phase post-balancing plans + composition.
+
+        Needs only example *lengths* -- no payloads -- so plan-ahead mode
+        runs it for step k+1 while step k's forward pass is on device.
+        With ``concurrent_dispatch`` every phase's solve runs on its
+        dispatcher's own worker thread (NumPy releases the GIL in the
+        sort/scan kernels, and one dispatcher per modality is exactly the
+        paper's Fig. 4 layout).  Without ``caps`` the communicator plans
+        are skipped (plan-only accounting, e.g. the overhead benchmark).
+        """
         cfg = self.cfg
         t0 = time.perf_counter()
-
-        # Global example ids (segment ids shared across phases).
-        ex_id = {}
-        nid = 1
-        for i, insts in enumerate(examples_per_instance):
-            for j, _ in enumerate(insts):
-                ex_id[(i, j)] = nid
-                nid += 1
+        phase_ms: dict[str, float] = {}
 
         # ---- LLM backbone plan (interleaved lengths, S6). -------------
         key = "text" if cfg.family == "audio" else "total"
@@ -201,22 +271,40 @@ class MLLMGlobalOrchestrator:
                  for ex in insts], np.int64)
             for insts in examples_per_instance
         ]
-        llm_plan = self.llm_dispatcher.plan(llm_lengths)
-        pi_m = llm_plan.pi
-
-        # ---- Encoder plans + composition. ------------------------------
-        enc_plans: dict[str, DispatchPlan] = {}
-        pi_es: dict[str, Rearrangement] = {}
-        composed: dict[str, Rearrangement] = {}
-        comm_plans: dict[str, CommPlan] = {}
-        for e in cfg.encoders:
-            lens = [
+        enc_lengths = {
+            e.name: [
                 np.array([getattr(ex, f"{e.name}_meta") for ex in insts
                           if getattr(ex, f"{e.name}_meta") > 0], np.int64)
                 for insts in examples_per_instance
             ]
-            plan = self.enc_dispatchers[e.name].plan(lens)
-            enc_plans[e.name] = plan
+            for e in cfg.encoders
+        }
+
+        enc_plans: dict[str, DispatchPlan] = {}
+        if self.concurrent_dispatch and cfg.encoders:
+            tickets = {
+                name: self.enc_dispatchers[name].submit(lens)
+                for name, lens in enc_lengths.items()
+            }
+            llm_plan = self.llm_dispatcher.plan(llm_lengths)
+            for name, ticket in tickets.items():
+                enc_plans[name] = ticket.result()
+        else:
+            llm_plan = self.llm_dispatcher.plan(llm_lengths)
+            for name, lens in enc_lengths.items():
+                enc_plans[name] = self.enc_dispatchers[name].plan(lens)
+        phase_ms["llm"] = llm_plan.solve_ms
+        for name, plan in enc_plans.items():
+            phase_ms[name] = plan.solve_ms
+        pi_m = llm_plan.pi
+
+        # ---- Composition + communicator plans. -------------------------
+        tc = time.perf_counter()
+        pi_es: dict[str, Rearrangement] = {}
+        composed: dict[str, Rearrangement] = {}
+        comm_plans: dict[str, CommPlan] = {}
+        for e in cfg.encoders:
+            plan = enc_plans[e.name]
             # pi_e's orig_slot indexes the SUBSET of modality-bearing
             # examples; remap to full example slots so composition joins.
             pi_e = _remap_subset_slots(plan.pi, examples_per_instance, e.name)
@@ -227,15 +315,73 @@ class MLLMGlobalOrchestrator:
                 comp, lengths=np.ceil(comp.lengths / e.downsample).astype(np.int64)
             )
             composed[e.name] = comp
-            src_starts = _encoder_out_starts(pi_e, caps.enc_row[e.name], e.downsample)
-            comm_plans[e.name] = build_comm_plan(
-                comp,
-                caps.enc_in[e.name] // e.downsample,
-                caps.enc_out[e.name],
-                src_starts=src_starts,
-                chunk_cap=caps.chunk[e.name],
-            )
-        solve_ms = (time.perf_counter() - t0) * 1e3
+            if caps is not None:
+                src_starts = _encoder_out_starts(pi_e, caps.enc_row[e.name],
+                                                 e.downsample)
+                comm_plans[e.name] = build_comm_plan(
+                    comp,
+                    caps.enc_in[e.name] // e.downsample,
+                    caps.enc_out[e.name],
+                    src_starts=src_starts,
+                    chunk_cap=caps.chunk[e.name],
+                )
+        phase_ms["compose"] = (time.perf_counter() - tc) * 1e3
+        return PhasePlans(
+            llm_plan=llm_plan,
+            enc_plans=enc_plans,
+            pi_es=pi_es,
+            composed=composed,
+            comm_plans=comm_plans,
+            phase_solve_ms=phase_ms,
+            solve_ms=(time.perf_counter() - t0) * 1e3,
+        )
+
+    def plan_ahead(
+        self,
+        examples_per_instance: Sequence[Sequence[Example]],
+        caps: Capacities,
+    ) -> PlanAheadHandle:
+        """Run :meth:`plan_phases` on a background thread; the returned
+        handle's ``result()`` reports the latency that was actually
+        exposed to the caller."""
+        box: dict = {}
+
+        def run() -> None:
+            try:
+                box["plans"] = self.plan_phases(examples_per_instance, caps)
+            except BaseException as e:
+                box["error"] = e
+
+        thread = threading.Thread(target=run, name="orch-plan-ahead", daemon=True)
+        thread.start()
+        return PlanAheadHandle(thread, box)
+
+    # ------------------------------------------------------------------
+    def plan_and_pack(
+        self,
+        examples_per_instance: Sequence[Sequence[Example]],
+        caps: Capacities,
+        rng: np.random.Generator,
+        plans: PhasePlans | None = None,
+        *,
+        exposed_ms: float | None = None,
+    ) -> tuple[dict[str, np.ndarray], OrchestratorReport]:
+        cfg = self.cfg
+        overlapped = plans is not None
+        if plans is None:
+            plans = self.plan_phases(examples_per_instance, caps)
+        llm_plan, enc_plans = plans.llm_plan, plans.enc_plans
+        pi_m = llm_plan.pi
+        pi_es, composed, comm_plans = plans.pi_es, plans.composed, plans.comm_plans
+        solve_ms = plans.solve_ms
+
+        # Global example ids (segment ids shared across phases).
+        ex_id = {}
+        nid = 1
+        for i, insts in enumerate(examples_per_instance):
+            for j, _ in enumerate(insts):
+                ex_id[(i, j)] = nid
+                nid += 1
 
         # ---- Pack device arrays. ---------------------------------------
         if cfg.family == "audio":
@@ -247,7 +393,12 @@ class MLLMGlobalOrchestrator:
         else:
             batch = self._pack_text(examples_per_instance, ex_id, pi_m, caps, rng)
 
-        report = self._report(llm_plan, enc_plans, composed, solve_ms)
+        report = self._report(
+            llm_plan, enc_plans, composed, solve_ms,
+            phase_solve_ms=plans.phase_solve_ms,
+            exposed_ms=exposed_ms if exposed_ms is not None else solve_ms,
+            overlapped=overlapped,
+        )
         return batch, report
 
     # ------------------------------------------------------------------
@@ -425,7 +576,8 @@ class MLLMGlobalOrchestrator:
             **_plan_arrays(e.name, comm_plan),
         }
 
-    def _report(self, llm_plan, enc_plans, composed, solve_ms):
+    def _report(self, llm_plan, enc_plans, composed, solve_ms,
+                phase_solve_ms=None, exposed_ms=None, overlapped=False):
         util = {"llm": llm_plan.utilization}
         maxc = {"llm": llm_plan.max_cost}
         costs = {"llm": llm_plan.costs}
@@ -446,6 +598,9 @@ class MLLMGlobalOrchestrator:
             comm_volume=comm,
             internode_volume=inter,
             solve_ms=solve_ms,
+            phase_solve_ms=dict(phase_solve_ms or {}),
+            exposed_ms=solve_ms if exposed_ms is None else exposed_ms,
+            overlapped=overlapped,
         )
 
 

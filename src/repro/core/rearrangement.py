@@ -99,11 +99,10 @@ class Rearrangement:
 
     def dest_lengths(self) -> list[np.ndarray]:
         """Per destination instance, the ordered sequence lengths."""
-        out: list[list[int]] = [[] for _ in range(self.d)]
         order = np.lexsort((self.dst_slot, self.dst_inst))
-        for k in order:
-            out[int(self.dst_inst[k])].append(int(self.lengths[k]))
-        return [np.asarray(x, dtype=np.int64) for x in out]
+        lens_sorted = np.asarray(self.lengths, dtype=np.int64)[order]
+        counts = np.bincount(self.dst_inst[order], minlength=self.d)
+        return np.split(lens_sorted, np.cumsum(counts)[:-1])
 
     def comm_matrix(self) -> np.ndarray:
         """V[i, j] = token volume moving from instance i to instance j (S5.2.2)."""

@@ -8,8 +8,13 @@ the all-to-all *communication* stays on the critical path (inside the
 jitted step).
 
 ``PrefetchingLoader`` runs sampling + ``plan_and_pack`` on a background
-thread with a bounded queue; ``overlap_stats()`` reports how much
-dispatcher time was hidden (benchmarks use it for the Table-2 analog).
+thread with a bounded queue.  With ``plan_ahead=True`` it goes one step
+further: step k+1's phase plans (``orchestrator.plan_phases``) are
+launched *before* step k is packed, so the dispatcher solve overlaps
+both the worker's own packing and the consumer's forward pass -- the
+per-step ``report.exposed_ms`` then measures how much dispatcher time
+was actually left on the critical path (~0 when fully hidden).
+``overlap_stats()`` aggregates it for the Table-2 analog.
 """
 from __future__ import annotations
 
@@ -38,6 +43,7 @@ class PrefetchingLoader:
         modalities: tuple[str, ...] = ("vision", "audio"),
         sampler: Callable[[np.random.Generator, int], list[Example]] | None = None,
         depth: int = 2,
+        plan_ahead: bool = True,
     ) -> None:
         self.orch = orchestrator
         self.caps = caps
@@ -46,8 +52,10 @@ class PrefetchingLoader:
         self.mix = mix
         self.modalities = modalities
         self.sampler = sampler
+        self.plan_ahead = plan_ahead
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self.solve_ms_total = 0.0
+        self.exposed_ms_total = 0.0
         self.batches_produced = 0
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -66,16 +74,39 @@ class PrefetchingLoader:
         return out
 
     def _worker(self) -> None:
+        pending = None  # (examples, PlanAheadHandle) for the next step
         while not self._stop.is_set():
             t0 = time.perf_counter()
-            examples = self._sample()
+            if pending is None:
+                examples = self._sample()
+                handle = (self.orch.plan_ahead(examples, self.caps)
+                          if self.plan_ahead else None)
+            else:
+                examples, handle = pending
+                pending = None
+            if self.plan_ahead:
+                # Launch step k+1's plans before packing step k: the
+                # solve overlaps our packing of step k AND the consumer's
+                # forward pass, so by the time the worker loops around
+                # the plans are ready (exposed ~ 0).
+                nxt = self._sample()
+                pending = (nxt, self.orch.plan_ahead(nxt, self.caps))
             try:
-                batch, report = self.orch.plan_and_pack(examples, self.caps, self.rng)
+                if handle is not None:
+                    plans, exposed_ms = handle.result()
+                    batch, report = self.orch.plan_and_pack(
+                        examples, self.caps, self.rng, plans,
+                        exposed_ms=exposed_ms,
+                    )
+                else:
+                    batch, report = self.orch.plan_and_pack(
+                        examples, self.caps, self.rng)
             except ValueError:
                 # Capacity overflow on a pathological draw: resample.
                 continue
             dt = (time.perf_counter() - t0) * 1e3
             self.solve_ms_total += report.solve_ms
+            self.exposed_ms_total += report.exposed_ms
             self.batches_produced += 1
             item = (batch, report, dt)
             while not self._stop.is_set():
@@ -96,6 +127,7 @@ class PrefetchingLoader:
         return {
             "batches": self.batches_produced,
             "mean_solve_ms": self.solve_ms_total / n,
+            "mean_exposed_ms": self.exposed_ms_total / n,
         }
 
     def close(self) -> None:

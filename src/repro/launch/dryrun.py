@@ -104,6 +104,8 @@ def _compile_once(cfg, shape, mesh, comm_mode):
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax<0.5 returns [dict]
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
     return mem, cost, hlo
 

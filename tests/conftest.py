@@ -1,0 +1,18 @@
+"""Test-suite bootstrap.
+
+When `hypothesis` is unavailable (offline container), install the
+deterministic fallback shim BEFORE collection so the property-test
+modules import cleanly; with the real package installed this is a no-op.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))  # tests/ for `tests.*` imports
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(__file__)), "src"))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from helpers import hypothesis_compat
+
+    hypothesis_compat.install()

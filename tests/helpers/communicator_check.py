@@ -80,6 +80,10 @@ def run_case(mesh, dp_axes, d, seed, mode, nodewise=False):
 def check_ragged_lowers(mesh, dp_axes, d, seed):
     """ragged_all_to_all does not execute on XLA:CPU; assert it traces
     and lowers (the TPU-target path)."""
+    if not hasattr(jax.lax, "ragged_all_to_all"):
+        print(f"skip ragged lowering: jax {jax.__version__} lacks "
+              "jax.lax.ragged_all_to_all")
+        return True
     rng = np.random.default_rng(seed)
     lens = [rng.integers(1, 40, size=3) for _ in range(d)]
     pi = post_balance(lens, d, CostModel())

@@ -1,0 +1,160 @@
+"""Deterministic fallback for `hypothesis` when it is not installed.
+
+The test suite's property tests use a small slice of the Hypothesis API
+(`given`, `settings`, `strategies.integers/lists/permutations`).  In
+offline environments without the package, :func:`install` registers this
+module as ``hypothesis`` / ``hypothesis.strategies`` in ``sys.modules``
+*before collection* (see ``tests/conftest.py``), so the same test code
+runs against fixed-seed random examples instead:
+
+  - every ``@given`` test runs ``max_examples`` draws (from the
+    ``@settings`` decorator, default 20),
+  - the RNG is seeded from the test's qualified name, so runs are
+    deterministic and failures reproducible,
+  - no shrinking -- the failing drawn arguments are attached to the
+    assertion message instead.
+
+With real Hypothesis installed (e.g. in CI), this module is inert.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "install", "HealthCheck"]
+
+
+class Strategy:
+    """Base class: a strategy draws a value from an np.random.Generator."""
+
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too strict for compat shim")
+
+        return Strategy(draw)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 31) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> Strategy:
+    return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq) -> Strategy:
+    seq = list(seq)
+    return Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def lists(elements: Strategy, *, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(size)]
+
+    return Strategy(draw)
+
+
+def permutations(values) -> Strategy:
+    values = list(values)
+
+    def draw(rng):
+        out = list(values)
+        rng.shuffle(out)
+        return out
+
+    return Strategy(draw)
+
+
+def tuples(*strats: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+
+class HealthCheck:
+    """Placeholder mirroring hypothesis.HealthCheck members."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.data_too_large, cls.filter_too_much]
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    """Decorator recording run parameters for the `given` wrapper."""
+
+    def deco(fn):
+        fn._compat_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*strats: Strategy, **kw_strats: Strategy):
+    """Deterministic replacement for hypothesis.given."""
+
+    def deco(fn):
+        conf = getattr(fn, "_compat_settings", {"max_examples": 20})
+
+        def wrapper(*args, **kwargs):
+            seed = zlib.crc32(fn.__qualname__.encode("utf-8"))
+            rng = np.random.default_rng(seed)
+            for example in range(conf["max_examples"]):
+                drawn = [s.draw(rng) for s in strats]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"{e}\n[hypothesis_compat] falsifying example "
+                        f"#{example}: args={drawn!r} kwargs={drawn_kw!r}"
+                    ) from e
+
+        # Copy identity WITHOUT functools.wraps: __wrapped__ would make
+        # pytest resolve the original signature and treat the drawn
+        # parameters as fixtures.
+        for attr in ("__name__", "__qualname__", "__module__", "__doc__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as `hypothesis` (+`.strategies`) if absent."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "permutations", "tuples"):
+        setattr(st, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.HealthCheck = HealthCheck
+    hyp.__version__ = "0.0-compat"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,198 @@
+"""Backend equivalence: the vectorized engine vs the python reference.
+
+Guarantees under test (see core/balancing_vec.py):
+  * pad / conv: identical batch *contents* item for item,
+  * nopad / quad: identical multiset of batch costs (the load evolution
+    matches the heap's exactly; only index tie-breaks may differ),
+  * all four: identical max-cost objective, never worse than the python
+    path, and within the approximation guarantee of the brute-force
+    oracle on tiny instances,
+  * the batched objective evaluator agrees with the scalar cost model.
+"""
+import zlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.balancing import (
+    brute_force_oracle,
+    flatten_instance_lengths,
+    post_balance,
+    post_balance_conv,
+    post_balance_nopad,
+    post_balance_pad,
+    post_balance_quad,
+    select_algorithm,
+)
+from repro.core.cost_model import CostModel
+
+ALGOS = ("nopad", "pad", "quad", "conv")
+
+COST_MODELS = {
+    "nopad": CostModel(alpha=1.0, beta=0.0),
+    "pad": CostModel(alpha=1.0, beta=1e-3, padding=True),
+    "quad": CostModel(alpha=1.0, beta=1e-2),
+    "conv": CostModel(alpha=1.0, beta=1e-3, conv_attention=True),
+}
+
+
+def _run(algo, lens, d, backend):
+    cm = COST_MODELS[algo]
+    return post_balance(lens, d, cm, algorithm=algo, backend=backend), cm
+
+
+def _batch_contents(pi):
+    return sorted(tuple(l.tolist()) for l in pi.dest_lengths())
+
+
+def _cost_multiset(pi, cm):
+    return sorted(round(cm.cost(l), 6) for l in pi.dest_lengths())
+
+
+def _check_equivalence(lens, d):
+    for algo in ALGOS:
+        py, cm = _run(algo, lens, d, "python")
+        vec, _ = _run(algo, lens, d, "vectorized")
+        if algo in ("pad", "conv"):
+            assert _batch_contents(py) == _batch_contents(vec), algo
+        assert _cost_multiset(py, cm) == _cost_multiset(vec, cm), algo
+        # Max-cost objective identical (the acceptance criterion).
+        mp = max(cm.cost(l) for l in py.dest_lengths())
+        mv = max(cm.cost(l) for l in vec.dest_lengths())
+        assert mv <= mp + 1e-9 * max(mp, 1.0), algo
+        # Vectorized output is a true rearrangement.
+        items = flatten_instance_lengths(lens)
+        got = sorted(zip(vec.orig_inst.tolist(), vec.orig_slot.tolist()))
+        assert got == sorted((i, j) for i, j, _ in items), algo
+        for i in range(d):
+            slots = sorted(vec.dst_slot[vec.dst_inst == i].tolist())
+            assert slots == list(range(len(slots))), algo
+
+
+@given(
+    st.lists(
+        st.lists(st.integers(1, 60), min_size=0, max_size=6),
+        min_size=1, max_size=8,
+    )
+)
+@settings(max_examples=60, deadline=None)
+def test_property_backends_equivalent(lens_py):
+    d = len(lens_py)
+    lens = [np.array(x, dtype=np.int64) for x in lens_py]
+    _check_equivalence(lens, d)
+
+
+@given(
+    st.lists(
+        st.lists(st.integers(1, 25), min_size=1, max_size=3),
+        min_size=2, max_size=3,
+    )
+)
+@settings(max_examples=25, deadline=None)
+def test_property_vectorized_within_oracle_bounds(lens_py):
+    """On tiny instances both backends obey the approximation guarantees
+    vs the exact oracle: >= OPT always, and Alg 1 <= 4/3 OPT."""
+    d = len(lens_py)
+    lens = [np.array(x, dtype=np.int64) for x in lens_py]
+    if sum(len(x) for x in lens_py) > 8:
+        return
+    for algo in ALGOS:
+        cm = COST_MODELS[algo]
+        opt = brute_force_oracle(lens, d, cm)
+        for backend in ("python", "vectorized"):
+            pi = post_balance(lens, d, cm, algorithm=algo, backend=backend)
+            got = max(cm.cost(l) for l in pi.dest_lengths())
+            assert got >= opt - 1e-9
+            if algo == "nopad":
+                assert got <= 4.0 / 3.0 * opt + 1e-9
+
+
+@pytest.mark.parametrize("dist", ["uniform", "lognormal", "constant",
+                                  "powers", "with_zeros"])
+@pytest.mark.parametrize("d", [1, 5, 32])
+def test_fixed_distributions_equivalent(dist, d):
+    # crc32, not hash(): str hashing is salted per process, and these
+    # draws must be reproducible across runs.
+    rng = np.random.default_rng(zlib.crc32(f"{dist}/{d}".encode()))
+    per = 40
+    draw = {
+        "uniform": lambda: rng.integers(1, 300, per),
+        "lognormal": lambda: rng.lognormal(4, 1.1, per).astype(np.int64) + 1,
+        "constant": lambda: np.full(per, 17, dtype=np.int64),
+        "powers": lambda: (2 ** rng.integers(0, 10, per)).astype(np.int64),
+        "with_zeros": lambda: rng.integers(0, 4, per),
+    }[dist]
+    lens = [draw() for _ in range(d)]
+    _check_equivalence(lens, d)
+
+
+def test_direct_function_backends():
+    rng = np.random.default_rng(3)
+    items = flatten_instance_lengths([rng.integers(1, 90, 7) for _ in range(6)])
+    for fn, kw in ((post_balance_nopad, {}), (post_balance_pad, {}),
+                   (post_balance_quad, {"lam": 0.05}), (post_balance_conv, {})):
+        py = fn(items, 6, **kw)
+        vec = fn(items, 6, backend="vectorized", **kw)
+        assert sorted(py.lengths.tolist()) == sorted(vec.lengths.tolist())
+
+
+def test_quad_tolerance_method_retained():
+    """The paper-faithful tolerance comparator is still available."""
+    rng = np.random.default_rng(9)
+    items = flatten_instance_lengths([rng.integers(1, 50, 6) for _ in range(4)])
+    pi = post_balance_quad(items, 4, lam=0.02, method="tolerance")
+    assert pi.n == len(items)
+    with pytest.raises(ValueError):
+        post_balance_quad(items, 4, method="bogus")
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError):
+        post_balance([np.array([1, 2])], 1, CostModel(), backend="cuda")
+
+
+def test_select_algorithm_policy():
+    assert select_algorithm(CostModel(conv_attention=True, beta=0.1), 10) == "conv"
+    assert select_algorithm(CostModel(padding=True), 10) == "pad"
+    assert select_algorithm(CostModel(alpha=1.0, beta=0.01), 100) == "quad"
+    assert select_algorithm(CostModel(alpha=1.0, beta=1e-6), 100) == "nopad"
+
+
+# ----------------------------------------------------------------------
+# Batched objective evaluator.
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("cm", list(COST_MODELS.values()),
+                         ids=list(COST_MODELS))
+def test_segment_costs_matches_scalar(cm):
+    rng = np.random.default_rng(11)
+    d = 5
+    lengths = rng.integers(0, 40, 30)
+    ids = rng.integers(0, d, 30)
+    got = cm.segment_costs(lengths, ids, d)
+    want = np.array([cm.cost(lengths[ids == i]) for i in range(d)])
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_assignment_costs_matches_scalar():
+    rng = np.random.default_rng(12)
+    cm = CostModel(alpha=1.0, beta=0.01, padding=True)
+    lengths = rng.integers(1, 20, 6)
+    assigns = rng.integers(0, 3, size=(8, 6))
+    got = cm.assignment_costs(lengths, assigns, 3)
+    for r in range(8):
+        want = [cm.cost(lengths[assigns[r] == i]) for i in range(3)]
+        np.testing.assert_allclose(got[r], want, rtol=1e-12)
+
+
+def test_oracle_known_case():
+    # lengths {4, 3, 3, 2} over d=2, linear cost: OPT = 6 (4+2 | 3+3).
+    lens = [np.array([4, 3]), np.array([3, 2])]
+    assert brute_force_oracle(lens, 2, CostModel()) == 6.0
+
+
+def test_oracle_guards():
+    with pytest.raises(ValueError):
+        brute_force_oracle([np.arange(1, 14)], 2, CostModel())
+    assert brute_force_oracle([np.array([], dtype=int)], 2, CostModel()) == 0.0
