@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Literal
 
-__all__ = ["EncoderConfig", "ModelConfig"]
+__all__ = ["EncoderConfig", "ModelConfig", "with_attention_backend"]
 
 Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
 
@@ -84,10 +84,17 @@ class ModelConfig:
 
     # Numerics / implementation.
     dtype: str = "bfloat16"
-    # "chunked_unrolled" = roofline mode: inner scans (attention KV
-    # blocks, xent chunks) unroll so cost_analysis counts every
-    # iteration (XLA prices a while-loop body once).
-    attention_impl: Literal["reference", "chunked", "chunked_unrolled"] = "chunked"
+    # Attention backend for every attention site (encoders, LLM
+    # backbone, cross attention, decode) -- see
+    # repro.models.attention.ATTENTION_BACKENDS.
+    #   "chunked_unrolled" = roofline mode: inner scans (attention KV
+    #   blocks, xent chunks) unroll so cost_analysis counts every
+    #   iteration (XLA prices a while-loop body once).
+    #   "flash" = the Pallas kernel (Mosaic on TPU, interpret off-TPU);
+    #   "flash_interpret" forces the interpreter (CPU validation).
+    attention_impl: Literal[
+        "reference", "chunked", "chunked_unrolled", "flash", "flash_interpret"
+    ] = "chunked"
     block_q: int = 512
     block_kv: int = 512
     # Beyond-paper: window-chunked segment attention.  When set (to the
@@ -109,6 +116,22 @@ class ModelConfig:
     @property
     def head_dim_(self) -> int:
         return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def attention_backend(self) -> str:
+        """The configured attention backend (``attention_impl`` keeps its
+        historical field name for config compatibility)."""
+        return self.attention_impl
+
+    @property
+    def decode_backend(self) -> str:
+        """Backend for single-token decode.  The chunked scan is pure
+        overhead for a 1-row query, so chunked variants decode through
+        the dense reference row; flash backends pass through (the kernel
+        pads the query tile)."""
+        if self.attention_impl in ("flash", "flash_interpret"):
+            return self.attention_impl
+        return "reference"
 
     @property
     def d_inner(self) -> int:
@@ -153,6 +176,20 @@ class ModelConfig:
             encoders=enc,
             name=self.name + "-smoke",
         )
+
+
+def with_attention_backend(cfg: ModelConfig, backend: str | None) -> ModelConfig:
+    """Copy of ``cfg`` on the given attention backend, validated eagerly
+    (a typo fails here, not deep inside a jitted trace).  None = cfg
+    unchanged."""
+    if backend is None:
+        return cfg
+    from repro.models.attention import ATTENTION_BACKENDS
+
+    if backend not in ATTENTION_BACKENDS:
+        raise ValueError(f"unknown attention backend {backend!r}; "
+                         f"choose from {ATTENTION_BACKENDS}")
+    return dataclasses.replace(cfg, attention_impl=backend)
 
 
 def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:

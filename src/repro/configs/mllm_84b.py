@@ -18,5 +18,10 @@ CONFIG = ModelConfig(
                       d_ff=12288, embed_dim=1280, downsample=4, padded=True,
                       conv_attention=True, tokens_per_example_max=1500),
     ),
+    # Train on the Pallas flash path end to end (encoders + backbone +
+    # decode); compiles via Mosaic on TPU, interpret mode elsewhere.
+    attention_impl="flash",
+    block_q=128,
+    block_kv=128,
     citation="OrchMLLM Table 1 (MLLM-84B)",
 )

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.utils import round_up as _round_up
 
 __all__ = ["ARCHITECTURES", "INPUT_SHAPES", "get_config", "input_specs", "step_kind"]
 
@@ -57,12 +58,16 @@ INPUT_SHAPES = {
 LONG_CONTEXT_OK = {"falcon_mamba_7b", "zamba2_2_7b", "h2o_danube_3_4b"}
 
 
-def get_config(name: str) -> ModelConfig:
+def get_config(name: str, *, attention_backend: str | None = None) -> ModelConfig:
+    """Resolve ``--arch <id>``; ``attention_backend`` overrides the
+    config's attention path (e.g. force "flash" / "reference")."""
     name = name.replace("-", "_")
     if name not in ARCHITECTURES:
         raise KeyError(f"unknown arch {name!r}; choose from {ARCHITECTURES}")
     mod = importlib.import_module(f"repro.configs.{name}")
-    return mod.CONFIG
+    from repro.configs.base import with_attention_backend
+
+    return with_attention_backend(mod.CONFIG, attention_backend)
 
 
 def step_kind(cfg: ModelConfig, shape: InputShape) -> str | None:
@@ -216,5 +221,3 @@ def cache_specs(cfg: ModelConfig, B: int, seq_len: int):
     raise ValueError(cfg.family)
 
 
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m

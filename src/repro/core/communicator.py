@@ -52,6 +52,7 @@ else:  # pragma: no cover - depends on installed jax version
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.core.rearrangement import Rearrangement
+from repro.utils import round_up as _round_up
 
 __all__ = ["CommPlan", "build_comm_plan", "apply_comm_plan", "plan_to_device"]
 
@@ -112,10 +113,6 @@ def _layout(insts: np.ndarray, slots: np.ndarray, lengths: np.ndarray, d: int):
             off += lengths[k]
         totals[i] = off
     return starts, totals
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 def build_comm_plan(
@@ -282,7 +279,8 @@ def apply_comm_plan(
     """
     d = int(np.prod([mesh.shape[a] for a in dp_axes]))
     cap_in = x.shape[0] // d
-    cap_out = plan_arrays["post_gather"].shape[-1]
+    # post_mask is the one plan array every mode carries.
+    cap_out = plan_arrays["post_mask"].shape[-1]
     feat = x.shape[1:]
     axis = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     row = P(dp_axes)

@@ -34,12 +34,9 @@ from repro.core.balancing import post_balance
 from repro.core.cost_model import CostModel, _segment_max
 from repro.core.nodewise import nodewise_rearrange
 from repro.core.rearrangement import Rearrangement, identity_rearrangement
+from repro.utils import round_up as _round_up
 
 __all__ = ["DispatchPlan", "PlanTicket", "BatchPostBalancingDispatcher"]
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 @dataclasses.dataclass

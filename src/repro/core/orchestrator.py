@@ -32,6 +32,7 @@ from repro.core.dispatcher import BatchPostBalancingDispatcher, DispatchPlan
 from repro.core.rearrangement import Rearrangement, compose
 from repro.data.packing import pack_padded_stream, pack_stream
 from repro.data.synthetic import Example
+from repro.utils import round_up as _round_up
 
 
 def _ex_rng(seed: int, sid: int, tag: str) -> np.random.Generator:
@@ -50,10 +51,6 @@ __all__ = [
     "llm_cost_model",
     "encoder_cost_model",
 ]
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,14 +26,14 @@ def default_interpret() -> bool:
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
-                                   "interpret"))
+                                   "interpret", "block_skip"))
 def flash_attention_op(q, k, v, q_seg, kv_seg, q_pos, kv_pos, *,
                        causal=True, window=None, block_q=128, block_kv=128,
-                       interpret=None):
+                       interpret=None, block_skip=True):
     interpret = default_interpret() if interpret is None else interpret
     return _flash(q, k, v, q_seg, kv_seg, q_pos, kv_pos, causal=causal,
                   window=window, block_q=block_q, block_kv=block_kv,
-                  interpret=interpret)
+                  interpret=interpret, block_skip=block_skip)
 
 
 @partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))

@@ -1,16 +1,28 @@
-"""Attention for packed (post-balanced) batches.
+"""Attention for packed (post-balanced) batches: the unified backend.
 
 Everything below is segment-aware: post-balancing produces per-shard
 PACKED token streams (no padding, paper Alg 1/3), so attention must not
 leak across example boundaries.  Convention: ``segment id 0 = padding``,
 positive ids are example ids; positions restart at 0 per example.
 
-Two lowering paths:
-  * ``reference``: full [Tq, Tkv] score matrix (oracle; small shapes).
-  * ``chunked``: flash-style online-softmax over KV blocks (lax.scan),
-    memory O(block) -- the portable default for big shapes; the Pallas
-    kernel in ``repro.kernels.flash_attention`` is the TPU-target
-    version of the same computation.
+Every attention site in the repo (encoder stacks, the LLM backbone,
+enc-dec cross attention, decode) funnels through :func:`attention`,
+selected by ``backend``:
+
+  * ``reference``       full [Tq, Tkv] score matrix (oracle; small shapes).
+  * ``chunked``         flash-style online-softmax over KV blocks
+                        (lax.scan) with a recompute-based custom VJP --
+                        the portable pure-jnp path.
+  * ``chunked_unrolled``  same, scans unrolled (roofline cost probes).
+  * ``flash``           the Pallas TPU kernel
+                        (``repro.kernels.flash_attention``): fwd + bwd
+                        kernels, custom VJP, block-level segment
+                        sparsity.  Compiles via Mosaic on TPU; falls
+                        back to interpret execution off-TPU.
+  * ``flash_interpret`` the same kernel forced through the Pallas
+                        interpreter (CPU-container validation mode).
+  * ``windowed[...]``   window-chunked wrapper over any of the above
+                        (see ``_windowed``); e.g. ``windowed_flash``.
 
 Supports GQA (n_kv_heads < n_heads), RoPE applied by the caller,
 sliding-window (h2o-danube / mistral), qk-norm (qwen3, applied by the
@@ -24,7 +36,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["attention", "make_segment_mask"]
+__all__ = ["attention", "make_segment_mask", "windowed_variant",
+           "ATTENTION_BACKENDS"]
+
+ATTENTION_BACKENDS = ("reference", "chunked", "chunked_unrolled", "flash",
+                      "flash_interpret")
 
 NEG_INF = -2.0**30
 
@@ -294,7 +310,7 @@ def _make_flash(causal, window, scale, block_q, block_kv, unroll):
 # T*2W instead of T^2.
 # ----------------------------------------------------------------------
 def _windowed(q, k, v, q_seg, kv_seg, q_pos, kv_pos, *, causal, window,
-              impl, block_q, block_kv, chunk_w):
+              backend, block_q, block_kv, chunk_w):
     B, T, H, D = q.shape
     if k.shape[1] != T:
         raise ValueError("windowed attention requires self-attention layout")
@@ -327,10 +343,63 @@ def _windowed(q, k, v, q_seg, kv_seg, q_pos, kv_pos, *, causal, window,
 
     out = attention(
         qc, kc, vc, q_seg=qs, kv_seg=ks, q_pos=qp, kv_pos=kp,
-        causal=causal, window=window, impl=impl,
+        causal=causal, window=window, backend=backend,
         block_q=block_q, block_kv=block_kv,
     )
     return out.reshape(B, nw * W, H, D)[:, :T]
+
+
+# ----------------------------------------------------------------------
+# Pallas flash backend: the TPU kernel (fwd + custom-VJP bwd + block
+# skipping) behind the model-level [B,T,H,D] / GQA / ragged-length
+# calling convention.
+# ----------------------------------------------------------------------
+def _pallas_flash(q, k, v, q_seg, kv_seg, q_pos, kv_pos, *, causal, window,
+                  block_q, block_kv, interpret):
+    from repro.kernels.ops import flash_attention_op
+    from repro.utils import round_up
+
+    B, Tq, H, D = q.shape
+    Tkv = k.shape[1]
+    bq = min(block_q, round_up(Tq, 8))
+    bk = min(block_kv, round_up(Tkv, 8))
+    pad_q = round_up(Tq, bq) - Tq
+    pad_k = round_up(Tkv, bk) - Tkv
+
+    def padt(x, n):
+        return jnp.pad(x, [(0, 0), (0, n)] + [(0, 0)] * (x.ndim - 2))
+
+    # Pad to tile multiples; padded slots carry seg 0 => masked out, and
+    # padded query rows are sliced off (their cotangents never reach q).
+    qt = jnp.moveaxis(padt(q, pad_q), 1, 2)  # [B,H,Tq',D]
+    kt = jnp.moveaxis(padt(k, pad_k), 1, 2)
+    vt = jnp.moveaxis(padt(v, pad_k), 1, 2)
+    out = flash_attention_op(
+        qt, kt, vt,
+        padt(q_seg.astype(jnp.int32), pad_q),
+        padt(kv_seg.astype(jnp.int32), pad_k),
+        padt(q_pos.astype(jnp.int32), pad_q),
+        padt(kv_pos.astype(jnp.int32), pad_k),
+        causal=causal, window=None if window is None else int(window),
+        block_q=bq, block_kv=bk, interpret=interpret,
+    )
+    return jnp.moveaxis(out, 1, 2)[:, :Tq]
+
+
+def windowed_variant(backend: str) -> str:
+    """Name of the window-chunked wrapper around ``backend``."""
+    if backend.startswith("windowed"):
+        return backend
+    if backend.startswith("chunked"):
+        return backend.replace("chunked", "windowed")
+    return "windowed_" + backend
+
+
+def _windowed_inner(backend: str) -> str:
+    suffix = backend[len("windowed"):].lstrip("_")
+    if suffix in ("", "unrolled"):
+        return "chunked" + ("_" + suffix if suffix else "")
+    return suffix
 
 
 def attention(
@@ -344,33 +413,41 @@ def attention(
     kv_pos: jnp.ndarray,
     causal: bool = True,
     window: int | None = None,
-    impl: str = "chunked",
+    backend: str | None = None,
+    impl: str | None = None,
     block_q: int = 512,
     block_kv: int = 512,
     chunk_w: int | None = None,
 ) -> jnp.ndarray:
-    """Segment-aware GQA attention.
+    """Segment-aware GQA attention behind a selectable ``backend``
+    (module docstring lists them; ``impl`` is the legacy alias).
 
     Shapes: q [B,Tq,H,D]; k,v [B,Tkv,Hkv,D]; seg/pos [B,T*] int32.
     Returns [B,Tq,H,D].
     """
+    backend = backend or impl or "chunked"
     if q.shape[2] % k.shape[2] != 0:
         raise ValueError(f"n_heads {q.shape[2]} not multiple of kv heads {k.shape[2]}")
     scale = 1.0 / np.sqrt(q.shape[-1])
-    if impl.startswith("windowed"):
-        inner = "chunked" + impl[len("windowed"):]  # windowed_unrolled -> chunked_unrolled
+    if backend.startswith("windowed"):
         if chunk_w is None:
             raise ValueError("windowed attention needs chunk_w (max segment len)")
         return _windowed(q, k, v, q_seg, kv_seg, q_pos, kv_pos, causal=causal,
-                         window=window, impl=inner, block_q=block_q,
-                         block_kv=block_kv, chunk_w=chunk_w)
-    if impl == "reference":
+                         window=window, backend=_windowed_inner(backend),
+                         block_q=block_q, block_kv=block_kv, chunk_w=chunk_w)
+    if backend == "reference":
         mask = make_segment_mask(q_seg, kv_seg, q_pos, kv_pos, causal=causal, window=window)
         return _reference(q, k, v, mask, scale)
-    if impl in ("chunked", "chunked_unrolled"):
-        unroll = 10**9 if impl == "chunked_unrolled" else 1
+    if backend in ("flash", "flash_interpret"):
+        return _pallas_flash(
+            q, k, v, q_seg, kv_seg, q_pos, kv_pos, causal=causal,
+            window=window, block_q=block_q, block_kv=block_kv,
+            interpret=True if backend == "flash_interpret" else None,
+        )
+    if backend in ("chunked", "chunked_unrolled"):
+        unroll = 10**9 if backend == "chunked_unrolled" else 1
         flash = _make_flash(causal, window, scale, block_q, block_kv,
                             min(unroll, -(-k.shape[1] // min(block_kv, k.shape[1]))))
         return flash(q, k, v, q_seg.astype(jnp.int32), kv_seg.astype(jnp.int32),
                      q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32))
-    raise ValueError(f"unknown attention impl {impl!r}")
+    raise ValueError(f"unknown attention backend {backend!r}")

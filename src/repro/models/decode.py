@@ -62,7 +62,8 @@ def _attn_decode(cfg, lp, x, k_cache, v_cache, kv_pos, kv_seg, t, *, window):
         kv_seg=kv_seg,
         q_pos=jnp.full((B, 1), t, jnp.int32),
         kv_pos=kv_pos,
-        causal=True, window=window, impl="reference",
+        causal=True, window=window, backend=cfg.decode_backend,
+        block_q=cfg.block_q, block_kv=cfg.block_kv,
     )  # [B,1,H,hd]
     H, hd = cfg.n_heads, cfg.head_dim_
     o = jnp.einsum("bhe,hed->bd", out[:, 0], lp["wo"].reshape(H, hd, D))
@@ -229,7 +230,8 @@ def _decode_encdec(cfg, params, x, cache, t):
             kv_seg=cache["cross_seg"],
             q_pos=jnp.full((h.shape[0], 1), t, jnp.int32),
             kv_pos=cache["cross_pos"],
-            causal=False, window=None, impl="reference",
+            causal=False, window=None, backend=cfg.decode_backend,
+            block_q=cfg.block_q, block_kv=cfg.block_kv,
         )
         carry = carry + jnp.einsum("bhe,hed->bd", out[:, 0], lp["xwo"].reshape(H, hd, D))
         h = _norm(cfg, carry, lp.get("mlp_norm"))

@@ -358,7 +358,7 @@ def _forward_encdec(cfg, params, batch, exchange):
 
 def _xent_unroll(cfg):
     # Roofline mode: unrolled scans so cost_analysis counts every chunk.
-    return 10**9 if cfg.attention_impl == "chunked_unrolled" else 1
+    return 10**9 if cfg.attention_backend == "chunked_unrolled" else 1
 
 
 def _final_norm(cfg, params, x):

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.attention import attention
+from repro.models.attention import attention, windowed_variant
 from repro.models.layers import apply_rope, gelu_mlp, layer_norm, rms_norm, rotary_embedding, swiglu
 from repro.models.moe import moe_ffn
 from repro.models.ssm import (
@@ -61,14 +61,14 @@ def _attend(cfg: ModelConfig, p: Params, x, seg, pos, sin, cos, *,
         q = apply_rope(q, sin, cos)
         k = apply_rope(k, sin, cos)
         kv_seg, kv_pos = seg, pos
-    use_impl = impl or cfg.attention_impl
-    if cfg.segment_window and kv is None and use_impl.startswith("chunked"):
-        use_impl = use_impl.replace("chunked", "windowed")
+    backend = impl or cfg.attention_backend
+    if cfg.segment_window and kv is None and backend != "reference":
+        backend = windowed_variant(backend)
     out = attention(
         q, k, v,
         q_seg=seg, kv_seg=kv_seg, q_pos=pos, kv_pos=kv_pos,
         causal=causal, window=cfg.sliding_window if kv is None else None,
-        impl=use_impl,
+        backend=backend,
         block_q=cfg.block_q, block_kv=cfg.block_kv,
         chunk_w=cfg.segment_window,
     )
@@ -151,7 +151,7 @@ def _hybrid_stack(cfg: ModelConfig, params: Params, x, seg, pos, sin, cos):
 
     # Roofline mode: unroll the inner mamba scan so every layer's FLOPs
     # are visible to cost_analysis (outer scan handled by extrapolation).
-    inner_unroll = every if cfg.attention_impl == "chunked_unrolled" else 1
+    inner_unroll = every if cfg.attention_backend == "chunked_unrolled" else 1
 
     def group_body(carry, gp):
         y, _ = jax.lax.scan(mamba_body_ck, carry, gp, unroll=inner_unroll)

@@ -9,13 +9,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, with_attention_backend
 from repro.models.decode import decode_step
 
 __all__ = ["make_serve_step", "init_cache"]
 
 
-def make_serve_step(cfg: ModelConfig):
+def make_serve_step(cfg: ModelConfig, *, attention_backend: str | None = None):
+    """``attention_backend`` overrides ``cfg.attention_impl`` for the
+    decode attention sites (resolved via ``cfg.decode_backend``)."""
+    cfg = with_attention_backend(cfg, attention_backend)
+
     def serve_step(params, tokens, cache, t):
         logits, cache = decode_step(cfg, params, tokens, cache, t)
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]

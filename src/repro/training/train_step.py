@@ -13,7 +13,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, with_attention_backend
 from repro.core.communicator import apply_comm_plan
 from repro.models.model import forward
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
@@ -37,9 +37,8 @@ def make_exchange(cfg: ModelConfig, mesh, dp_axes, *, mode: str = "a2a"):
                 "post_gather_dense": batch[f"enc_{name}_plan_post_gather_dense"],
                 "post_mask": batch[f"enc_{name}_plan_post_mask"],
                 "global_gather": batch[f"enc_{name}_plan_global_gather"],
-                "post_gather": batch[f"enc_{name}_plan_post_gather_dense"],  # alias for cap_out
             }
-            cap_out = plan["post_gather_dense"].shape[-1]
+            cap_out = plan["post_mask"].shape[-1]
             flat = enc_tok.reshape(S * T, D)
             if mesh is None:
                 idx = plan["global_gather"].reshape(-1)
@@ -54,7 +53,12 @@ def make_exchange(cfg: ModelConfig, mesh, dp_axes, *, mode: str = "a2a"):
     return exchange_factory
 
 
-def make_loss_fn(cfg: ModelConfig, mesh=None, dp_axes=("data",), *, comm_mode="a2a"):
+def make_loss_fn(cfg: ModelConfig, mesh=None, dp_axes=("data",), *,
+                 comm_mode="a2a", attention_backend: str | None = None):
+    """``attention_backend`` overrides ``cfg.attention_impl`` for every
+    attention site inside the jitted loss/grad (e.g. "flash" to train on
+    the Pallas path, "reference" for an oracle run)."""
+    cfg = with_attention_backend(cfg, attention_backend)
     exchange_factory = make_exchange(cfg, mesh, dp_axes, mode=comm_mode)
 
     def loss_fn(params, batch):
@@ -74,9 +78,11 @@ def make_train_step(
     dp_axes=("data",),
     *,
     comm_mode: str = "a2a",
+    attention_backend: str | None = None,
 ):
     opt_cfg = opt_cfg or AdamWConfig()
-    loss_fn = make_loss_fn(cfg, mesh, dp_axes, comm_mode=comm_mode)
+    loss_fn = make_loss_fn(cfg, mesh, dp_axes, comm_mode=comm_mode,
+                           attention_backend=attention_backend)
 
     def train_step(params, opt_state, batch):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
@@ -87,11 +93,13 @@ def make_train_step(
 
 
 def make_prefill_step(cfg: ModelConfig, mesh=None, dp_axes=("data",), *,
-                      comm_mode: str = "a2a"):
+                      comm_mode: str = "a2a",
+                      attention_backend: str | None = None):
     """Forward-only (inference prefill): returns per-stream loss metrics.
     Serving prefill reuses the same packed-stream forward; logits for
     sampling come from the serve path."""
-    loss_fn = make_loss_fn(cfg, mesh, dp_axes, comm_mode=comm_mode)
+    loss_fn = make_loss_fn(cfg, mesh, dp_axes, comm_mode=comm_mode,
+                           attention_backend=attention_backend)
 
     def prefill_step(params, batch):
         _, metrics = loss_fn(params, batch)

@@ -1,0 +1,9 @@
+"""Small shared numeric helpers."""
+from __future__ import annotations
+
+__all__ = ["round_up"]
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return -(-x // m) * m

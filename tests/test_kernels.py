@@ -1,10 +1,12 @@
 """Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracle
-(interpret=True executes the kernel body on CPU)."""
+(interpret=True executes the kernel body on CPU -- the same path the
+model-level ``flash_interpret`` backend selects)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.flash_attention import count_live_tiles, live_tile_mask
 from repro.kernels.ops import flash_attention_op, selective_scan_op
 from repro.kernels.ref import flash_attention_ref, selective_scan_ref
 
@@ -120,6 +122,91 @@ def test_selective_scan_segment_reset_isolates_examples():
     np.testing.assert_allclose(
         np.asarray(y_packed[half:]), np.asarray(y_alone), atol=1e-5, rtol=1e-5
     )
+
+
+@pytest.mark.parametrize(
+    "causal,window",
+    [(True, None), (False, None), (True, 64)],
+)
+def test_flash_attention_vjp_matches_ref_autodiff(causal, window):
+    """jax.grad through the Pallas custom VJP (dq/dk/dv kernels) must
+    match autodiff through the dense oracle to fp32 tolerance."""
+    rng = np.random.default_rng(7)
+    B, H, T, D = 2, 2, 256, 64
+    q = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    seg, pos = _segs(rng, B, T, 4)
+
+    def make_loss(fn):
+        def loss(q, k, v):
+            o = fn(q, k, v, seg, seg, pos, pos, causal=causal, window=window)
+            return jnp.sum(jnp.sin(o.astype(jnp.float32)))
+        return jax.grad(loss, argnums=(0, 1, 2))
+
+    flash_fn = lambda *a, **kw: flash_attention_op(*a, interpret=True, **kw)
+    got = make_loss(flash_fn)(q, k, v)
+    want = make_loss(flash_attention_ref)(q, k, v)
+    for name, g, w in zip("qkv", got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), atol=2e-5, rtol=2e-5,
+            err_msg=f"d{name} mismatch (causal={causal} window={window})")
+
+
+def test_flash_attention_block_skip_parity():
+    """Block-skipping is a pure FLOP optimization: outputs and gradients
+    must be bit-identical with it on or off."""
+    rng = np.random.default_rng(8)
+    B, H, T, D = 1, 2, 384, 32
+    q = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    seg, pos = _segs(rng, B, T, 5)
+
+    def run(block_skip):
+        def loss(x):
+            o = flash_attention_op(x, x, x, seg, seg, pos, pos,
+                                   interpret=True, block_skip=block_skip)
+            return jnp.sum(o * o)
+        out = flash_attention_op(q, q, q, seg, seg, pos, pos,
+                                 interpret=True, block_skip=block_skip)
+        return out, jax.grad(loss)(q)
+
+    out_on, g_on = run(True)
+    out_off, g_off = run(False)
+    np.testing.assert_array_equal(np.asarray(out_on), np.asarray(out_off))
+    np.testing.assert_array_equal(np.asarray(g_on), np.asarray(g_off))
+
+
+def test_flash_block_skip_visits_fewer_tiles():
+    """A multi-segment packed stream must skip KV tiles: segment-range
+    disjointness + the causal frontier prune most of the grid."""
+    T, blk = 1024, 128
+    seg = np.repeat(np.arange(1, 9), T // 8).astype(np.int32)[None]
+    pos = np.tile(np.arange(T // 8), 8).astype(np.int32)[None]
+    seg, pos = jnp.asarray(seg), jnp.asarray(pos)
+    visited, total = count_live_tiles(seg, seg, pos, pos, block_q=blk,
+                                      block_kv=blk, causal=True, window=None)
+    assert visited < total, (visited, total)
+    # Segments align with tiles here, so only the diagonal survives.
+    assert visited == T // blk
+    live = live_tile_mask(seg, seg, pos, pos, block_q=blk, block_kv=blk,
+                          causal=True, window=None)
+    np.testing.assert_array_equal(np.asarray(live[0]), np.eye(T // blk, dtype=bool))
+
+
+def test_flash_fully_padded_tail_tiles_skipped_and_zero():
+    rng = np.random.default_rng(9)
+    B, H, T, D = 1, 1, 256, 32
+    q = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    seg = np.zeros((B, T), np.int32)
+    pos = np.zeros((B, T), np.int32)
+    seg[0, :100] = 1
+    pos[0, :100] = np.arange(100)
+    seg, pos = jnp.asarray(seg), jnp.asarray(pos)
+    out = flash_attention_op(q, q, q, seg, seg, pos, pos, interpret=True)
+    assert np.allclose(np.asarray(out[0, 0, 100:]), 0.0)
+    visited, total = count_live_tiles(seg, seg, pos, pos, block_q=128,
+                                      block_kv=128, causal=True, window=None)
+    assert (visited, total) == (1, 4)  # only the (q0, k0) tile is live
 
 
 def test_flash_attention_segment_isolation():
