@@ -1,53 +1,64 @@
-"""Serving example: batched single-token decode with per-family caches.
+"""Serving example: the continuous-batching engine on a multimodal trace.
 
-Decodes a batch of requests for three different architecture families
-(dense+SWA ring buffer, SSM constant state, hybrid) to show the
-serve_step contract the decode_32k / long_500k dry-run shapes lower.
+Builds a bursty request trace from the synthetic multimodal dataset
+(``data.synthetic`` -- mixed prefill lengths per Modality Composition
+Incoherence), drives the paged-KV continuous-batching engine over it,
+and prints the EngineReport.  A second run uses two post-balanced
+replicas, and a third shows temperature/top-k sampling behind a PRNG
+key.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
-import time
+import dataclasses
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config
-from repro.serving.serve_step import init_cache, make_serve_step
-from repro.training.train_step import init_train_state
+from repro.configs import EngineConfig, get_config
+from repro.data.synthetic import TaskMix, sample_examples
+from repro.models.model import init_params
+from repro.serving.engine import Engine, MultiReplicaEngine, requests_from_examples
+from repro.serving.serve_step import make_sample_fn
 
 
-def run(arch: str, batch: int = 4, prompt_len: int = 12, new_tokens: int = 16):
-    cfg = get_config(arch).smoke()
-    params, _ = init_train_state(cfg, jax.random.PRNGKey(0))
-    cache = init_cache(cfg, batch, 128)
-    if cfg.family == "audio":
-        cache["cross_seg"] = cache["cross_seg"].at[:, :8].set(1)
-    serve = jax.jit(make_serve_step(cfg))
-
-    # "Prefill" by decoding the prompt token by token (keeps the example
-    # dependent only on serve_step; batch prefill is the prefill_32k path).
-    rng = jax.random.PRNGKey(1)
-    prompt = jax.random.randint(rng, (batch, prompt_len), 1, cfg.vocab_size)
-    tok = prompt[:, :1]
-    t0 = time.time()
-    out = []
-    for t in range(prompt_len + new_tokens):
-        nxt, logits, cache = serve(params, tok, cache, jnp.int32(t))
-        tok = prompt[:, t + 1 : t + 2] if t + 1 < prompt_len else nxt
-        if t >= prompt_len:
-            out.append(nxt[:, 0])
-    toks = jnp.stack(out, axis=1)
-    dt = time.time() - t0
-    print(f"{arch:24s} [{cfg.family:6s}] generated {toks.shape} tokens in "
-          f"{dt:.2f}s ({batch * new_tokens / dt:.1f} tok/s); "
-          f"sample={toks[0, :8].tolist()}")
+def build_trace(cfg, n_requests: int, *, seed: int = 0, burst: int = 4):
+    """n_requests synthetic multimodal requests arriving in bursts."""
+    rng = np.random.default_rng(seed)
+    examples = sample_examples(rng, n_requests, TaskMix(), ("vision", "audio"))
+    return requests_from_examples(
+        examples, vocab=cfg.vocab_size, max_total_len=192, rng=rng,
+        max_new_lo=4, max_new_hi=24, length_scale=24,
+        arrival_step_fn=lambda i: 3 * (i // burst))
 
 
 def main():
-    for arch in ("h2o_danube_3_4b", "falcon_mamba_7b", "zamba2_2_7b",
-                 "whisper_large_v3"):
-        run(arch)
-    print("OK: all families decode with their native cache types")
+    cfg = get_config("llava_next_mistral_7b").smoke()  # vlm: vision-weighted prefills
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(block_size=16, num_blocks=65, max_num_seqs=6,
+                        token_budget=512, max_model_len=192,
+                        prefill_pad=32, decode_pad=2)
+
+    print(f"== {cfg.name}: single replica, greedy ==")
+    engine = Engine(cfg, ecfg, params)
+    report = engine.run(build_trace(cfg, 12))
+    print(report.summary())
+    print(f"sample stream (req 0): {engine.requests[0].output_tokens[:10]}")
+
+    print("\n== two post-balanced replicas ==")
+    multi = MultiReplicaEngine(
+        cfg, dataclasses.replace(ecfg, replicas=2), params)
+    report = multi.run(build_trace(cfg, 12))
+    print(report.summary())
+    loads = np.concatenate(multi.assignment_loads)
+    print(f"per-burst replica loads (weighted tokens): {loads.astype(int).tolist()}")
+
+    print("\n== temperature 0.8 / top-k 16 sampling ==")
+    engine = Engine(cfg, ecfg, params,
+                    sample_fn=make_sample_fn(temperature=0.8, top_k=16),
+                    rng_key=jax.random.PRNGKey(42))
+    report = engine.run(build_trace(cfg, 8))
+    print(report.summary())
+    print("OK: continuous batching, post-balanced replicas, sampling")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,16 @@
-from repro.configs.base import EncoderConfig, ModelConfig
+from repro.configs.base import EncoderConfig, EngineConfig, ModelConfig
 from repro.configs.registry import (
     ARCHITECTURES,
     INPUT_SHAPES,
+    cache_specs,
     get_config,
     input_specs,
+    paged_cache_specs,
     step_kind,
 )
 
 __all__ = [
-    "ARCHITECTURES", "INPUT_SHAPES", "EncoderConfig", "ModelConfig",
-    "get_config", "input_specs", "step_kind",
+    "ARCHITECTURES", "INPUT_SHAPES", "EncoderConfig", "EngineConfig",
+    "ModelConfig", "cache_specs", "get_config", "input_specs",
+    "paged_cache_specs", "step_kind",
 ]

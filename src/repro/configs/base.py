@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Literal
 
-__all__ = ["EncoderConfig", "ModelConfig", "with_attention_backend"]
+__all__ = ["EncoderConfig", "EngineConfig", "ModelConfig", "with_attention_backend"]
 
 Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
 
@@ -176,6 +176,60 @@ class ModelConfig:
             encoders=enc,
             name=self.name + "-smoke",
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Knobs for the continuous-batching serving engine
+    (:mod:`repro.serving.engine`).
+
+    The pool is ``num_blocks`` KV blocks of ``block_size`` tokens each
+    (block 0 is the reserved all-zero null block, so the usable capacity
+    is ``num_blocks - 1``).  ``token_budget`` caps the modality-weighted
+    work admitted per engine step: each running decode costs the serving
+    cost model's ``decode_cost`` (1 by default) and each admitted
+    prefill costs ``f(weighted prompt length)``.  ``max_model_len`` is
+    the logical per-sequence cache length (prompt + generation must fit
+    unless the model uses a sliding window, whose ring needs only
+    ``sliding_window`` slots).  ``prefill_pad`` / ``decode_pad`` round
+    batched shapes up so jit retraces stay bounded.
+    """
+
+    block_size: int = 16
+    num_blocks: int = 129
+    max_num_seqs: int = 8
+    token_budget: int = 512
+    max_model_len: int = 256
+    replicas: int = 1
+    prefill_pad: int = 32
+    decode_pad: int = 4
+    # Max padding overhead of a prefill sub-batch, as a fraction of its
+    # useful tokens: a group is closed rather than padded past
+    # useful * (1 + prefill_waste) slots.  Admitted prompts are split
+    # into length-sorted groups (Algorithm 2's bounded padded batches)
+    # so one long prompt cannot inflate every co-admitted short one to
+    # its padded length.
+    prefill_waste: float = 0.35
+    balancing_backend: str = "vectorized"
+
+    def __post_init__(self) -> None:
+        if self.block_size < 1 or self.num_blocks < 2:
+            raise ValueError("need block_size >= 1 and num_blocks >= 2 "
+                             "(block 0 is the reserved null block)")
+        if self.max_model_len % self.block_size:
+            raise ValueError(
+                f"max_model_len={self.max_model_len} must be a multiple of "
+                f"block_size={self.block_size}")
+        if self.max_num_seqs < 1 or self.replicas < 1:
+            raise ValueError("need max_num_seqs >= 1 and replicas >= 1")
+        if self.token_budget < 1 or self.prefill_pad < 1 or self.decode_pad < 1:
+            raise ValueError("token_budget / prefill_pad / decode_pad must be >= 1")
+        if self.prefill_waste < 0.0:
+            raise ValueError("prefill_waste must be >= 0")
+
+    @property
+    def usable_blocks(self) -> int:
+        return self.num_blocks - 1
 
 
 def with_attention_backend(cfg: ModelConfig, backend: str | None) -> ModelConfig:

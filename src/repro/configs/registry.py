@@ -18,7 +18,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.utils import round_up as _round_up
 
-__all__ = ["ARCHITECTURES", "INPUT_SHAPES", "get_config", "input_specs", "step_kind"]
+__all__ = ["ARCHITECTURES", "INPUT_SHAPES", "get_config", "input_specs", "step_kind",
+           "cache_specs", "paged_cache_specs"]
 
 ARCHITECTURES = (
     "falcon_mamba_7b",
@@ -219,5 +220,33 @@ def cache_specs(cfg: ModelConfig, B: int, seq_len: int):
             "cross_pos": _sds((B, enc_T), jnp.int32),
         }
     raise ValueError(cfg.family)
+
+
+def paged_cache_specs(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """Decode-state specs for the paged KV pool (serving engine).
+
+    The attention cache of :func:`cache_specs` re-laid-out as a pool of
+    fixed-size blocks shared by every sequence: k/v are
+    ``[L, num_blocks, block_size, Hkv, hd]`` and kv_pos/kv_seg are
+    ``[num_blocks, block_size]`` (shared across layers, exactly like the
+    dense ``[B, S]`` layout).  A sequence's logical cache of S slots is
+    the gather of its block table -- slot ``i`` lives at
+    ``(table[i // block_size], i % block_size)``.
+
+    Only attention-cache families page: SSM/hybrid decode state is O(1)
+    per sequence (nothing to page) and audio adds per-request
+    cross-attention state the pool does not model.
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"paged KV cache supports dense/moe/vlm families, not {cfg.family!r}")
+    bf16 = jnp.bfloat16
+    hd, Hkv, L = cfg.head_dim_, cfg.n_kv_heads, cfg.n_layers
+    return {
+        "k": _sds((L, num_blocks, block_size, Hkv, hd), bf16),
+        "v": _sds((L, num_blocks, block_size, Hkv, hd), bf16),
+        "kv_pos": _sds((num_blocks, block_size), jnp.int32),
+        "kv_seg": _sds((num_blocks, block_size), jnp.int32),
+    }
 
 

@@ -28,12 +28,13 @@ the model width.  SSM (Mamba) layers have NO quadratic term (beta = 0).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 
 __all__ = [
     "CostModel",
+    "ServingCostModel",
     "batch_length",
     "transformer_cost_coeffs",
 ]
@@ -150,6 +151,56 @@ class CostModel:
         c = self.costs(batches)
         m = float(c.max()) if c.size else 0.0
         return float(c.mean() / m) if m > 0 else 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingCostModel:
+    """Admission costs for the serving engine's scheduler.
+
+    Serving reuses the training-time balancing machinery: the set of
+    requests admitted to one engine step is a "mini-batch" whose cost a
+    token budget caps, and the waiting queue is post-balanced across
+    engine replicas with the same :class:`CostModel` objective
+    (``post_balance`` over weighted lengths).  Modality Composition
+    Incoherence shows up at serving time as prefill cost varying by
+    orders of magnitude with the request's modality mix, so:
+
+      prefill cost = f(modality-weighted length)
+                     where weighted length = text tokens
+                       + sum_m weight_m * modality-m tokens
+      decode cost  = ``decode_cost`` (one token per step, length
+                     independent to first order)
+
+    ``modality_weights[m]`` is the per-token compute of a modality-m
+    LLM token relative to a text token (its encoder + connector ride on
+    top of the backbone); modalities without an entry cost 1.0.
+    """
+
+    model: CostModel = dataclasses.field(default_factory=CostModel)
+    modality_weights: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    decode_cost: float = 1.0
+
+    def weighted_length(self, text_len: float,
+                        modality_tokens: Mapping[str, int] | None = None) -> float:
+        total = float(text_len)
+        for m, n in (modality_tokens or {}).items():
+            total += self.modality_weights.get(m, 1.0) * float(n)
+        return total
+
+    def prefill_cost(self, text_len: float,
+                     modality_tokens: Mapping[str, int] | None = None) -> float:
+        """f(S) of a single-request prefill at its weighted length."""
+        return self.model.cost([self.weighted_length(text_len, modality_tokens)])
+
+    def weighted_lengths(
+        self,
+        text_lens: Sequence[float],
+        modality_tokens: Sequence[Mapping[str, int] | None],
+    ) -> np.ndarray:
+        return np.array(
+            [self.weighted_length(t, m) for t, m in zip(text_lens, modality_tokens)],
+            dtype=np.float64,
+        )
 
 
 def transformer_cost_coeffs(

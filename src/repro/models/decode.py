@@ -10,6 +10,21 @@ Cache layouts (see repro.configs.registry.cache_specs):
 
 The new token is written at ring index ``t % S`` (full cache: S =
 seq_len, so the ring never wraps within the benchmarked step).
+
+Paged mode (the serving engine's continuous-batching path): pass
+``block_tables [B, W]`` and the pool cache layout from
+``registry.paged_cache_specs`` (k/v ``[L, NB, bs, Hkv, hd]``, kv_pos /
+kv_seg ``[NB, bs]``).  Each sequence's logical cache of S = W*bs slots
+is read through a block-table *gather* -- slot i lives at pool block
+``table[i // bs]``, offset ``i % bs`` -- so the exact same attention
+computation runs on paged storage.  ``t`` becomes a per-row [B] vector
+(continuous batching mixes sequences at different positions); a
+negative ``t[b]`` marks row b inactive: its cache writes are dropped
+(out-of-bounds scatter with mode="drop") and its logits are garbage the
+caller ignores.  Block tables padded with the reserved null block 0
+(all-zero k/v, kv_seg == 0) gather exactly what a dense zero-initialized
+cache holds in unwritten slots, which is what makes paged decode
+bit-identical to the dense path.
 """
 from __future__ import annotations
 
@@ -45,22 +60,47 @@ def _proj_qkv(cfg, lp, x):
     return q, k, v
 
 
-def _attn_decode(cfg, lp, x, k_cache, v_cache, kv_pos, kv_seg, t, *, window):
-    """x [B,D]; k/v_cache [B,S,Hkv,hd].  Returns (out [B,D], new k,v)."""
+def _attn_decode(cfg, lp, x, k_cache, v_cache, kv_pos, kv_seg, t, *, window,
+                 paged=None):
+    """x [B,D].  Returns (out [B,D], new k, new v).
+
+    Dense mode (``paged=None``): k/v_cache [B,S,Hkv,hd], scalar ``t``;
+    the new token lands at ring slot ``t % S``.  Paged mode: k/v_cache
+    are pool blocks [NB,bs,Hkv,hd], ``paged = (block_tables [B,W],
+    write_blk [B], write_off [B])`` and ``t`` is a per-row [B] vector
+    (negative = inactive row, writes dropped); kv_pos/kv_seg arrive
+    already gathered to [B, W*bs].  The returned k/v are the updated
+    dense cache resp. the updated pool blocks."""
     B, D = x.shape
-    S = k_cache.shape[1]
     q, k, v = _proj_qkv(cfg, lp, x)
-    sin, cos = rotary_embedding(jnp.full((B, 1), t), cfg.head_dim_, cfg.rope_theta)
-    q = apply_rope(q[:, None], sin, cos)  # [B,1,H,hd]
-    k = apply_rope(k[:, None], sin, cos)[:, 0]
-    idx = jnp.mod(t, S)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k[:, None], idx, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v[:, None], idx, axis=1)
+    if paged is None:
+        S = k_cache.shape[1]
+        sin, cos = rotary_embedding(jnp.full((B, 1), t), cfg.head_dim_, cfg.rope_theta)
+        q = apply_rope(q[:, None], sin, cos)  # [B,1,H,hd]
+        k = apply_rope(k[:, None], sin, cos)[:, 0]
+        idx = jnp.mod(t, S)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k[:, None], idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v[:, None], idx, axis=1)
+        k_read, v_read = k_cache, v_cache
+        q_pos = jnp.full((B, 1), t, jnp.int32)
+    else:
+        bt, wblk, woff = paged
+        bs = k_cache.shape[1]
+        S = bt.shape[1] * bs
+        tc = jnp.maximum(t, 0)
+        sin, cos = rotary_embedding(tc[:, None], cfg.head_dim_, cfg.rope_theta)
+        q = apply_rope(q[:, None], sin, cos)
+        k = apply_rope(k[:, None], sin, cos)[:, 0]
+        k_cache = k_cache.at[wblk, woff].set(k, mode="drop")
+        v_cache = v_cache.at[wblk, woff].set(v, mode="drop")
+        k_read = k_cache[bt].reshape((B, S) + k_cache.shape[2:])
+        v_read = v_cache[bt].reshape((B, S) + v_cache.shape[2:])
+        q_pos = tc[:, None].astype(jnp.int32)
     out = attention(
-        q, k_cache, v_cache,
+        q, k_read, v_read,
         q_seg=jnp.ones((B, 1), jnp.int32),
         kv_seg=kv_seg,
-        q_pos=jnp.full((B, 1), t, jnp.int32),
+        q_pos=q_pos,
         kv_pos=kv_pos,
         causal=True, window=window, backend=cfg.decode_backend,
         block_q=cfg.block_q, block_kv=cfg.block_kv,
@@ -79,13 +119,22 @@ def _update_pos_seg(cache, t, S):
     return kv_pos, kv_seg
 
 
-def decode_step(cfg: ModelConfig, params, tokens, cache, t):
+def decode_step(cfg: ModelConfig, params, tokens, cache, t, *, block_tables=None):
     """tokens [B,1] int32; t scalar int32 (current position).
+
+    With ``block_tables`` (paged mode, module docstring) ``cache`` is
+    the pool layout and ``t`` may be a per-row [B] vector with negative
+    entries marking inactive rows.
 
     Returns (logits [B, vocab], new_cache)."""
     x = jnp.take(params["embed"], tokens[:, 0], axis=0)  # [B,D]
 
-    if cfg.family in ("dense", "moe", "vlm"):
+    if block_tables is not None:
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"paged decode supports dense/moe/vlm families, not {cfg.family!r}")
+        x, cache = _decode_dense_paged(cfg, params, x, cache, t, block_tables)
+    elif cfg.family in ("dense", "moe", "vlm"):
         x, cache = _decode_dense(cfg, params, x, cache, t)
     elif cfg.family == "ssm":
         x, cache = _decode_ssm(cfg, params, x, cache)
@@ -110,6 +159,16 @@ def _final(cfg, params, x):
     return rms_norm(x, params["final_norm"])
 
 
+def _dense_ffn(cfg, lp, h):
+    """The dense-family FFN half of a decode layer ([B,D] -> [B,D])."""
+    if cfg.family == "moe":
+        ff, _ = moe_ffn(h[:, None, :], lp["router"], lp["w_gate"], lp["w_up"],
+                        lp["w_down"], top_k=cfg.experts_per_token,
+                        capacity_factor=cfg.capacity_factor)
+        return ff[:, 0]
+    return swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
 def _decode_dense(cfg, params, x, cache, t):
     S = cache["k"].shape[2]
     kv_pos, kv_seg = _update_pos_seg(cache, t, S)
@@ -121,19 +180,49 @@ def _decode_dense(cfg, params, x, cache, t):
                                  window=cfg.sliding_window)
         carry = carry + o
         h = _norm(cfg, carry, lp.get("mlp_norm"))
-        if cfg.family == "moe":
-            ff, _ = moe_ffn(h[:, None, :], lp["router"], lp["w_gate"], lp["w_up"],
-                            lp["w_down"], top_k=cfg.experts_per_token,
-                            capacity_factor=cfg.capacity_factor)
-            ff = ff[:, 0]
-        else:
-            ff = swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
-        return carry + ff, (kc, vc)
+        return carry + _dense_ffn(cfg, lp, h), (kc, vc)
 
     x, (k_new, v_new) = jax.lax.scan(
         body, x, (params["layers"], cache["k"], cache["v"]),
         unroll=min(cfg.scan_unroll, cfg.n_layers))
     return x, {**cache, "k": k_new, "v": v_new, "kv_pos": kv_pos, "kv_seg": kv_seg}
+
+
+def _decode_dense_paged(cfg, params, x, cache, t, block_tables):
+    """Dense-family decode on the paged pool (module docstring).
+
+    ``cache``: pool layout from ``registry.paged_cache_specs``;
+    ``block_tables`` [B, W] int32 (null block 0 pads unallocated tail
+    slots); ``t`` scalar or [B] (negative = inactive row)."""
+    B = x.shape[0]
+    NB, bs = cache["kv_seg"].shape
+    S = block_tables.shape[1] * bs
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    active = t >= 0
+    tc = jnp.maximum(t, 0)
+    idx = jnp.mod(tc, S)  # logical ring slot (= sliding-window ring)
+    wblk = jnp.where(
+        active, block_tables[jnp.arange(B), idx // bs].astype(jnp.int32), NB)
+    woff = jnp.mod(idx, bs)
+    kv_pos = cache["kv_pos"].at[wblk, woff].set(tc, mode="drop")
+    kv_seg = cache["kv_seg"].at[wblk, woff].set(1, mode="drop")
+    kv_pos_g = kv_pos[block_tables].reshape(B, S)
+    kv_seg_g = kv_seg[block_tables].reshape(B, S)
+
+    def body(carry, inp):
+        lp, kc, vc = inp
+        h = _norm(cfg, carry, lp.get("attn_norm"))
+        o, kc, vc = _attn_decode(cfg, lp, h, kc, vc, kv_pos_g, kv_seg_g, t,
+                                 window=cfg.sliding_window,
+                                 paged=(block_tables, wblk, woff))
+        carry = carry + o
+        h = _norm(cfg, carry, lp.get("mlp_norm"))
+        return carry + _dense_ffn(cfg, lp, h), (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=min(cfg.scan_unroll, cfg.n_layers))
+    return x, {"k": k_new, "v": v_new, "kv_pos": kv_pos, "kv_seg": kv_seg}
 
 
 def _decode_ssm(cfg, params, x, cache):

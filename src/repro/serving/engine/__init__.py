@@ -1,0 +1,29 @@
+"""Continuous-batching serving engine with paged KV cache and
+post-balanced admission scheduling (ISSUE 3).
+
+    request.py    Request / SequenceState lifecycle
+    kv_pool.py    PagedKVPool block allocator (alloc/free/defrag)
+    scheduler.py  token-budget admission + post_balance replica assignment
+    engine.py     Engine.step() loop, MultiReplicaEngine, EngineReport
+"""
+from repro.serving.engine.engine import Engine, EngineReport, MultiReplicaEngine
+from repro.serving.engine.kv_pool import NULL_BLOCK, PagedKVPool, PoolExhausted
+from repro.serving.engine.request import (
+    Request,
+    RequestState,
+    SequenceState,
+    requests_from_examples,
+)
+from repro.serving.engine.scheduler import (
+    Scheduler,
+    StepPlan,
+    assign_replicas,
+    serving_cost_model,
+)
+
+__all__ = [
+    "Engine", "EngineReport", "MultiReplicaEngine",
+    "NULL_BLOCK", "PagedKVPool", "PoolExhausted",
+    "Request", "RequestState", "SequenceState", "requests_from_examples",
+    "Scheduler", "StepPlan", "assign_replicas", "serving_cost_model",
+]

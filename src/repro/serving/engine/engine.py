@@ -1,0 +1,445 @@
+"""Continuous-batching engine loop: schedule -> prefill -> decode.
+
+``Engine.step()`` asks the :class:`~repro.serving.engine.scheduler.
+Scheduler` for a :class:`StepPlan` under the token budget, runs the
+admitted prompts through ONE jitted chunked-prefill call
+(``serving.serve_step.make_prefill_step``), runs the running sequences
+through ONE jitted paged decode call (``make_serve_step(paged=True)``),
+and streams sampled tokens into each request.  Sequences join and leave
+the decode batch every step (iteration-level scheduling), so a finished
+request's slot is recycled immediately instead of idling until the
+slowest member of a fixed batch completes.
+
+Exactness: prefill is a scan of the very same paged decode step, and
+paged reads gather bit-identical dense views (see
+:mod:`repro.models.decode`), so with greedy sampling every request's
+output stream is identical to running it alone through the dense-cache
+``serve_step`` path -- preemption included (recompute teacher-forces
+the tokens generated so far).
+
+``EngineReport`` mirrors ``OrchestratorReport``: throughput, TTFT, ITL,
+pool occupancy, budget utilization, and a padded-compute ``token_slots``
+account (the deterministic cost the serving benchmark compares against
+the fixed-batch baseline).
+
+``MultiReplicaEngine`` runs N engines behind one queue, post-balancing
+each arrival burst across replicas with the training dispatcher
+(:func:`~repro.serving.engine.scheduler.assign_replicas`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EngineConfig, ModelConfig
+from repro.core.cost_model import ServingCostModel
+from repro.serving.engine.kv_pool import PagedKVPool
+from repro.serving.engine.request import Request, RequestState, SequenceState
+from repro.serving.engine.scheduler import (
+    Scheduler,
+    StepPlan,
+    assign_replicas,
+    serving_cost_model,
+)
+from repro.serving.serve_step import make_prefill_step, make_serve_step
+from repro.utils import round_up
+
+__all__ = ["Engine", "MultiReplicaEngine", "EngineReport"]
+
+
+@dataclasses.dataclass
+class EngineReport:
+    """Per-run serving metrics (the ``OrchestratorReport`` analog)."""
+
+    n_requests: int
+    n_finished: int
+    n_steps: int
+    n_preemptions: int
+    prompt_tokens: int  # first-time prefill tokens (== sum of prompt lens)
+    recompute_tokens: int  # re-prefilled context after preemption (overhead)
+    generated_tokens: int
+    wall_s: float
+    throughput_tok_s: float  # generated tokens / wall second
+    token_slots: int  # padded (sequence, position) compute slots spent
+    slot_efficiency: float  # useful tokens / token_slots
+    ttft_steps_mean: float  # arrival -> first token, in engine steps
+    ttft_steps_p95: float
+    ttft_s_mean: float
+    itl_steps_mean: float  # steps per generated token after the first
+    occupancy_mean: float  # KV-pool block occupancy, sampled per step
+    occupancy_max: float
+    budget_util_mean: float  # budget_used / token_budget per step
+
+    def summary(self) -> str:
+        return (
+            f"requests {self.n_finished}/{self.n_requests} finished in "
+            f"{self.n_steps} steps ({self.n_preemptions} preemptions)\n"
+            f"tokens   {self.prompt_tokens} prompt + {self.generated_tokens} "
+            f"generated (+{self.recompute_tokens} recomputed); "
+            f"{self.throughput_tok_s:.1f} tok/s wall, "
+            f"{self.token_slots} compute slots "
+            f"({self.slot_efficiency:.1%} useful)\n"
+            f"latency  TTFT {self.ttft_steps_mean:.1f} steps mean / "
+            f"{self.ttft_steps_p95:.1f} p95 ({self.ttft_s_mean * 1e3:.1f} ms); "
+            f"ITL {self.itl_steps_mean:.2f} steps\n"
+            f"pool     occupancy {self.occupancy_mean:.1%} mean / "
+            f"{self.occupancy_max:.1%} max; budget {self.budget_util_mean:.1%}"
+        )
+
+
+def _percentile(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if len(xs) else 0.0
+
+
+def build_report(requests: Sequence[Request], *, n_steps: int, wall_s: float,
+                 token_slots: int, prompt_tokens: int, recompute_tokens: int,
+                 generated_tokens: int,
+                 occupancy_samples: Sequence[float],
+                 budget_fracs: Sequence[float]) -> EngineReport:
+    finished = [r for r in requests if r.state is RequestState.FINISHED]
+    ttft_steps = [r.first_token_step - r.arrival_step for r in finished
+                  if r.first_token_step is not None]
+    ttft_s = [r.first_token_time - r.arrival_time for r in finished
+              if r.first_token_time is not None]
+    itl = [(r.finish_step - r.first_token_step) / (len(r.output_tokens) - 1)
+           for r in finished
+           if len(r.output_tokens) > 1 and r.finish_step is not None]
+    # Recomputed context is real compute but NOT useful output -- it is
+    # preemption overhead and must not inflate slot_efficiency.
+    useful = prompt_tokens + generated_tokens
+    return EngineReport(
+        n_requests=len(requests),
+        n_finished=len(finished),
+        n_steps=n_steps,
+        n_preemptions=sum(r.n_preemptions for r in requests),
+        prompt_tokens=prompt_tokens,
+        recompute_tokens=recompute_tokens,
+        generated_tokens=generated_tokens,
+        wall_s=wall_s,
+        throughput_tok_s=generated_tokens / wall_s if wall_s > 0 else 0.0,
+        token_slots=token_slots,
+        slot_efficiency=useful / token_slots if token_slots else 0.0,
+        ttft_steps_mean=float(np.mean(ttft_steps)) if ttft_steps else 0.0,
+        ttft_steps_p95=_percentile(ttft_steps, 95),
+        ttft_s_mean=float(np.mean(ttft_s)) if ttft_s else 0.0,
+        itl_steps_mean=float(np.mean(itl)) if itl else 0.0,
+        occupancy_mean=float(np.mean(occupancy_samples)) if len(occupancy_samples) else 0.0,
+        occupancy_max=float(np.max(occupancy_samples)) if len(occupancy_samples) else 0.0,
+        budget_util_mean=float(np.mean(budget_fracs)) if len(budget_fracs) else 0.0,
+    )
+
+
+class Engine:
+    """One continuous-batching replica over one paged KV pool."""
+
+    def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig, params, *,
+                 sample_fn: Callable | None = None,
+                 attention_backend: str | None = None,
+                 rng_key=None,
+                 cost_model: ServingCostModel | None = None,
+                 replica_id: int = 0,
+                 jit_steps: tuple | None = None):
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"engine serves dense/moe/vlm families, not {cfg.family!r}")
+        self.cfg = cfg
+        self.engine_cfg = engine_cfg
+        self.params = params
+        self.replica_id = replica_id
+        # Logical per-sequence cache length: the SWA ring needs only the
+        # window (but never less -- a smaller ring would silently
+        # truncate attention vs the dense path); everything else must
+        # hold prompt + generation.
+        if cfg.sliding_window and engine_cfg.max_model_len < cfg.sliding_window:
+            raise ValueError(
+                f"max_model_len={engine_cfg.max_model_len} is smaller than "
+                f"sliding_window={cfg.sliding_window}; the ring must cover "
+                f"the full window")
+        self.seq_slots = cfg.sliding_window or engine_cfg.max_model_len
+        if self.seq_slots % engine_cfg.block_size:
+            raise ValueError(
+                f"per-sequence cache length {self.seq_slots} (sliding window "
+                f"or max_model_len) must be a multiple of "
+                f"block_size={engine_cfg.block_size}")
+        self.table_width = self.seq_slots // engine_cfg.block_size
+        self.pool = PagedKVPool(cfg, num_blocks=engine_cfg.num_blocks,
+                                block_size=engine_cfg.block_size)
+        self.scheduler = Scheduler(cost_model or serving_cost_model(cfg),
+                                   engine_cfg)
+        # ``jit_steps`` lets MultiReplicaEngine share one (prefill,
+        # decode) pair of jitted callables -- and their XLA compile
+        # caches -- across replicas instead of compiling per replica.
+        self._prefill, self._decode = jit_steps or (
+            jax.jit(make_prefill_step(
+                cfg, attention_backend=attention_backend, sample_fn=sample_fn)),
+            jax.jit(make_serve_step(
+                cfg, attention_backend=attention_backend, sample_fn=sample_fn,
+                paged=True)),
+        )
+        self._key = rng_key  # None = deterministic (greedy) path
+        self._rng_calls = 0  # folded into the key once per jitted call
+
+        self.waiting: list[SequenceState] = []
+        self.running: list[SequenceState] = []
+        self.requests: list[Request] = []
+        self.plans: list[StepPlan] = []
+        self.n_steps = 0
+        self.token_slots = 0
+        self.prompt_tokens = 0
+        self.recompute_tokens = 0
+        self.generated_tokens = 0
+        self.occupancy_samples: list[float] = []
+        self.budget_fracs: list[float] = []
+        self._wall_s = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def submit(self, request: Request) -> None:
+        """Queue a request (WAITING).  Prompt + generation must fit the
+        logical cache unless the model's sliding window bounds reads."""
+        total = request.prompt_len + request.max_new_tokens
+        if self.cfg.sliding_window is None and total > self.seq_slots:
+            raise ValueError(
+                f"request {request.req_id}: prompt+max_new={total} exceeds "
+                f"max_model_len={self.seq_slots}")
+        # Reject up front what no amount of preemption could ever place
+        # (a too-big head would livelock the strict-FIFO queue).
+        need = self.pool.blocks_for_slots(min(total, self.seq_slots))
+        if need > self.pool.usable_blocks:
+            raise ValueError(
+                f"request {request.req_id}: needs {need} KV blocks, pool has "
+                f"{self.pool.usable_blocks} total")
+        request.replica = self.replica_id
+        request.arrival_time = time.perf_counter()  # wall clock domain
+        self.requests.append(request)
+        self.waiting.append(SequenceState(request))
+
+    # ------------------------------------------------------------------
+    def step(self) -> StepPlan:
+        """One engine iteration: schedule -> batched prefill -> batched
+        decode -> lifecycle bookkeeping.  Returns the step's plan."""
+        t0 = time.perf_counter()
+        step = self.n_steps
+        plan = self.scheduler.schedule(step, self.waiting, self.running,
+                                       self.pool, seq_slots=self.seq_slots)
+        if plan.prefill:
+            self._run_prefill(plan.prefill, step)
+        if plan.decode:
+            self._run_decode(plan.decode, step)
+        self.n_steps += 1
+        self.plans.append(plan)
+        self.occupancy_samples.append(self.pool.occupancy)
+        self.budget_fracs.append(plan.budget_used / plan.budget)
+        self._wall_s += time.perf_counter() - t0
+        return plan
+
+    def _prefill_groups(self, seqs: list[SequenceState],
+                        prompts: list[np.ndarray]) -> list[list[int]]:
+        """Split one step's admitted prefills into low-padding
+        sub-batches: sort by prompt length (descending) and cut a new
+        group whenever padding the next prompt up to the group's padded
+        max would cost more than ``prefill_waste`` extra slots per
+        useful token (padded > useful * (1 + prefill_waste)) --
+        Algorithm 2's bounded padded batches applied to the prefill
+        batch dimension."""
+        ecfg = self.engine_cfg
+        order = sorted(range(len(seqs)), key=lambda i: -prompts[i].size)
+        groups: list[list[int]] = []
+        cur: list[int] = []
+        tp = useful = 0
+        for i in order:
+            n = int(prompts[i].size)
+            if not cur:
+                cur, tp, useful = [i], round_up(n, ecfg.prefill_pad), n
+                continue
+            if (len(cur) + 1) * tp > (useful + n) * (1.0 + ecfg.prefill_waste):
+                groups.append(cur)
+                cur, tp, useful = [i], round_up(n, ecfg.prefill_pad), n
+            else:
+                cur.append(i)
+                useful += n
+        if cur:
+            groups.append(cur)
+        return groups
+
+    def _next_key(self):
+        """Fresh key per jitted call (deterministic across identical
+        runs; never reused between prefill groups, decode calls, or
+        replicas)."""
+        if self._key is None:
+            return None
+        self._rng_calls += 1
+        return jax.random.fold_in(
+            jax.random.fold_in(self._key, self.replica_id), self._rng_calls)
+
+    def _run_prefill(self, seqs: list[SequenceState], step: int) -> None:
+        ecfg = self.engine_cfg
+        prompts = [s.request.full_prompt() for s in seqs]
+        for group in self._prefill_groups(seqs, prompts):
+            B = len(group)
+            lens = np.array([prompts[i].size for i in group], np.int32)
+            Tp = round_up(int(lens.max()), ecfg.prefill_pad)
+            batch = np.zeros((B, Tp), np.int32)
+            for row, i in enumerate(group):
+                batch[row, : prompts[i].size] = prompts[i]
+            bt = self.pool.table_array([seqs[i].seq_id for i in group],
+                                       self.table_width)
+            first, _, cache = self._prefill(
+                self.params, jnp.asarray(batch), jnp.asarray(lens),
+                self.pool.cache, jnp.asarray(bt), self._next_key())
+            self.pool.cache = cache
+            first = np.asarray(first)
+            now = time.perf_counter()
+            for row, i in enumerate(group):
+                # A recompute (post-preemption) re-prefills its whole
+                # context; only a first admission counts as useful
+                # prompt work.
+                if seqs[i].request.first_token_step is None:
+                    self.prompt_tokens += int(lens[row])
+                else:
+                    self.recompute_tokens += int(lens[row])
+                seqs[i].t = int(lens[row])
+                self._deliver(seqs[i], int(first[row, 0]), step, now)
+            self.token_slots += B * Tp
+
+    def _run_decode(self, seqs: list[SequenceState], step: int) -> None:
+        ecfg = self.engine_cfg
+        B = round_up(len(seqs), ecfg.decode_pad)
+        tokens = np.zeros((B, 1), np.int32)
+        t_vec = np.full(B, -1, np.int32)
+        for i, seq in enumerate(seqs):
+            tokens[i, 0] = seq.last_token
+            t_vec[i] = seq.t
+        bt = self.pool.table_array([s.seq_id for s in seqs], self.table_width)
+        if B > len(seqs):
+            bt = np.concatenate(
+                [bt, np.zeros((B - len(seqs), self.table_width), np.int32)])
+        nxt, _, cache = self._decode(
+            self.params, jnp.asarray(tokens), self.pool.cache,
+            jnp.asarray(bt), jnp.asarray(t_vec), self._next_key())
+        self.pool.cache = cache
+        nxt = np.asarray(nxt)
+        now = time.perf_counter()
+        for i, seq in enumerate(seqs):
+            seq.t += 1
+            self._deliver(seq, int(nxt[i, 0]), step, now)
+        self.token_slots += B
+
+    def _deliver(self, seq: SequenceState, token: int, step: int, now: float) -> None:
+        seq.last_token = token
+        seq.request.record_token(token, step, now)
+        self.generated_tokens += 1
+        if seq.request.done:
+            seq.request.finish(step, now)
+            self.pool.free(seq.seq_id)
+            self.running.remove(seq)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request] = (), *,
+            max_steps: int = 100_000) -> EngineReport:
+        """Drive to completion: submit each request when the step clock
+        reaches its ``arrival_step``, then step until idle."""
+        pending = sorted(requests, key=lambda r: (r.arrival_step, r.req_id))
+        while pending or self.has_work:
+            while pending and pending[0].arrival_step <= self.n_steps:
+                self.submit(pending.pop(0))
+            self.step()
+            if self.n_steps >= max_steps:
+                raise RuntimeError(
+                    f"engine did not drain within {max_steps} steps "
+                    f"({len(self.waiting)} waiting, {len(self.running)} running)")
+        return self.report()
+
+    def report(self) -> EngineReport:
+        return build_report(
+            self.requests, n_steps=self.n_steps, wall_s=self._wall_s,
+            token_slots=self.token_slots, prompt_tokens=self.prompt_tokens,
+            recompute_tokens=self.recompute_tokens,
+            generated_tokens=self.generated_tokens,
+            occupancy_samples=self.occupancy_samples,
+            budget_fracs=self.budget_fracs)
+
+
+class MultiReplicaEngine:
+    """N engine replicas behind one post-balanced admission queue.
+
+    Each arrival burst (requests sharing an ``arrival_step``) is
+    assigned across replicas by :func:`assign_replicas` -- the paper's
+    post-balancing applied to the waiting queue, minimizing the
+    straggler replica's weighted admission load."""
+
+    def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig, params,
+                 **engine_kw):
+        self.engine_cfg = engine_cfg
+        self.cost_model = engine_kw.pop("cost_model", None) or serving_cost_model(cfg)
+        shared = jax.jit(make_prefill_step(
+            cfg, attention_backend=engine_kw.get("attention_backend"),
+            sample_fn=engine_kw.get("sample_fn"))), jax.jit(make_serve_step(
+            cfg, attention_backend=engine_kw.get("attention_backend"),
+            sample_fn=engine_kw.get("sample_fn"), paged=True))
+        self.engines = [
+            Engine(cfg, engine_cfg, params, cost_model=self.cost_model,
+                   replica_id=i, jit_steps=shared, **engine_kw)
+            for i in range(engine_cfg.replicas)
+        ]
+        self.assignment_loads: list[np.ndarray] = []
+
+    @property
+    def has_work(self) -> bool:
+        return any(e.has_work for e in self.engines)
+
+    def submit_batch(self, requests: Sequence[Request]) -> np.ndarray:
+        """Post-balance one burst across replicas; returns the
+        per-replica weighted-length loads of this assignment."""
+        groups, loads = assign_replicas(
+            requests, len(self.engines), self.cost_model,
+            backend=self.engine_cfg.balancing_backend)
+        for engine, group in zip(self.engines, groups):
+            for r in group:
+                engine.submit(r)
+        self.assignment_loads.append(loads)
+        return loads
+
+    def step(self) -> None:
+        # Idle replicas step too: local step clocks stay in lockstep
+        # with the global arrival clock (TTFT-in-steps consistency).
+        for e in self.engines:
+            e.step()
+
+    def run(self, requests: Sequence[Request] = (), *,
+            max_steps: int = 100_000) -> EngineReport:
+        pending = sorted(requests, key=lambda r: (r.arrival_step, r.req_id))
+        clock = 0
+        while pending or self.has_work:
+            burst = []
+            while pending and pending[0].arrival_step <= clock:
+                burst.append(pending.pop(0))
+            if burst:
+                self.submit_batch(burst)
+            self.step()
+            clock += 1
+            if clock >= max_steps:
+                raise RuntimeError(f"replicas did not drain in {max_steps} steps")
+        return self.report()
+
+    def report(self) -> EngineReport:
+        requests = [r for e in self.engines for r in e.requests]
+        occ = [s for e in self.engines for s in e.occupancy_samples]
+        frac = [f for e in self.engines for f in e.budget_fracs]
+        return build_report(
+            requests,
+            n_steps=max((e.n_steps for e in self.engines), default=0),
+            wall_s=sum(e._wall_s for e in self.engines),
+            token_slots=sum(e.token_slots for e in self.engines),
+            prompt_tokens=sum(e.prompt_tokens for e in self.engines),
+            recompute_tokens=sum(e.recompute_tokens for e in self.engines),
+            generated_tokens=sum(e.generated_tokens for e in self.engines),
+            occupancy_samples=occ, budget_fracs=frac)

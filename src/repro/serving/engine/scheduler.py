@@ -1,0 +1,218 @@
+"""Post-balanced admission scheduling for the serving engine.
+
+Each engine step the scheduler packs work into a *token budget* using
+the same cost machinery as training-time Batch Post-Balancing:
+
+  1. running DECODE sequences go first, FIFO by arrival, at
+     ``decode_cost`` each (one token per step).  A sequence that needs a
+     fresh KV block it cannot get triggers *preemption*: the
+     youngest-arrival running sequence is evicted (blocks freed,
+     recompute on re-admission) until the allocation fits -- mirroring
+     vLLM's recompute preemption, oldest requests win.
+  2. WAITING requests are admitted FIFO while their weighted prefill
+     cost (``ServingCostModel.prefill_cost``: modality-weighted length
+     through the paper's f(S)) fits the remaining budget, the pool can
+     cover their prompt, and ``max_num_seqs`` is respected.  Strict
+     FIFO within each cost class = no starvation: a too-expensive queue
+     head *blocks* later arrivals instead of being skipped, and a head
+     whose cost alone exceeds the budget is admitted on an otherwise
+     idle step so it cannot livelock.
+
+In multi-replica mode :func:`assign_replicas` post-balances a batch of
+waiting requests across the N engine replicas by calling
+``core.balancing.post_balance`` (vectorized backend from
+``core.balancing_vec``) on the modality-weighted lengths -- the
+training dispatcher reused verbatim, now minimizing the straggler
+replica's admission cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.configs.base import EngineConfig, ModelConfig
+from repro.core.balancing import post_balance
+from repro.core.cost_model import CostModel, ServingCostModel, transformer_cost_coeffs
+from repro.serving.engine.kv_pool import PagedKVPool
+from repro.serving.engine.request import Request, RequestState, SequenceState
+
+__all__ = ["StepPlan", "Scheduler", "serving_cost_model", "assign_replicas"]
+
+
+def serving_cost_model(cfg: ModelConfig) -> ServingCostModel:
+    """Derive the serving admission costs from an architecture.
+
+    alpha/beta come from :func:`transformer_cost_coeffs` (so the
+    quadratic attention term prices long prompts super-linearly, as in
+    training).  Each encoder's modality weight is the encoder+connector
+    compute riding on one post-connector LLM token, relative to a
+    backbone token: ``1 + (enc_layers * enc_width^2 * downsample) /
+    (layers * width^2)`` -- ``downsample`` because each LLM token
+    aggregates that many encoder tokens."""
+    alpha, beta = transformer_cost_coeffs(
+        cfg.d_model, cfg.d_ff, max(1, cfg.n_layers),
+        moe_experts_active=max(1, cfg.experts_per_token),
+        ssm=cfg.family == "ssm")
+    base = max(1, cfg.n_layers) * cfg.d_model ** 2
+    weights = {
+        e.name: 1.0 + (e.n_layers * e.d_model ** 2 * e.downsample) / base
+        for e in cfg.encoders
+    }
+    return ServingCostModel(CostModel(alpha=alpha, beta=beta),
+                            modality_weights=weights)
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One engine step's scheduling decision (kept by the engine for the
+    invariant tests and the report's budget accounting)."""
+
+    step: int
+    prefill: list[SequenceState]
+    decode: list[SequenceState]
+    admitted: list[int]  # req_ids newly WAITING->PREFILL this step
+    preempted: list[int]  # req_ids evicted DECODE->WAITING this step
+    budget: float
+    budget_used: float
+
+    @property
+    def empty(self) -> bool:
+        return not (self.prefill or self.decode)
+
+
+def _fifo_key(seq: SequenceState):
+    return (seq.request.arrival_step, seq.request.arrival_time,
+            seq.request.req_id)
+
+
+class Scheduler:
+    def __init__(self, cost_model: ServingCostModel, engine_cfg: EngineConfig):
+        self.cost_model = cost_model
+        self.engine_cfg = engine_cfg
+
+    # ------------------------------------------------------------------
+    def request_cost(self, req: Request) -> float:
+        """Weighted prefill cost of (re)computing ``req``'s context:
+        generated-so-far tokens count as text (recompute prefills
+        them)."""
+        text = req.text_len + len(req.output_tokens)
+        return self.cost_model.prefill_cost(text, req.modality_tokens)
+
+    def prompt_blocks(self, req: Request, pool: PagedKVPool, seq_slots: int) -> int:
+        """Blocks an admission must reserve: the full-prompt span,
+        capped at the per-sequence ring length (windowed models wrap)."""
+        span = min(req.prompt_len + len(req.output_tokens), seq_slots)
+        return pool.blocks_for_slots(span)
+
+    # ------------------------------------------------------------------
+    def schedule(self, step: int, waiting: list[SequenceState],
+                 running: list[SequenceState], pool: PagedKVPool,
+                 *, seq_slots: int) -> StepPlan:
+        """Mutates ``waiting``/``running`` and the pool's tables: admits,
+        allocates, and preempts.  ``seq_slots`` is the per-sequence
+        logical cache length (ring length for windowed models)."""
+        budget = float(self.engine_cfg.token_budget)
+        used = 0.0
+        decode: list[SequenceState] = []
+        prefill: list[SequenceState] = []
+        admitted: list[int] = []
+        preempted: list[int] = []
+
+        # -- 1. running decodes, FIFO by arrival ------------------------
+        running.sort(key=_fifo_key)
+        pending = list(running)
+        while pending:
+            seq = pending.pop(0)
+            if used + self.cost_model.decode_cost > budget and decode:
+                break  # out of budget; the rest run next step
+            # Ring sequences (seq_slots-bounded) never grow past their
+            # table; growing sequences may need one fresh block.
+            slot = seq.t % seq_slots
+            need = pool.blocks_short(seq.seq_id, slot + 1)
+            while need and not pool.can_alloc(need):
+                victim = pending[-1] if pending else seq
+                self._preempt(victim, pool, waiting, running)
+                preempted.append(victim.seq_id)
+                if victim is seq:
+                    seq = None
+                    break
+                pending.pop()
+            if seq is None:
+                continue
+            pool.ensure(seq.seq_id, slot + 1)
+            decode.append(seq)
+            used += self.cost_model.decode_cost
+
+        # -- 2. waiting prefills, strict FIFO ---------------------------
+        waiting.sort(key=_fifo_key)
+        while waiting:
+            seq = waiting[0]
+            req = seq.request
+            if len(running) + len(prefill) >= self.engine_cfg.max_num_seqs:
+                break
+            cost = self.request_cost(req)
+            idle = not decode and not prefill
+            if used + cost > budget and not idle:
+                break  # head blocks the queue: FIFO, no skip-ahead
+            n_blocks = self.prompt_blocks(req, pool, seq_slots)
+            if not pool.can_alloc(n_blocks):
+                break
+            waiting.pop(0)
+            pool.alloc(req.req_id, n_blocks)
+            req.start_prefill()
+            seq.reset()
+            prefill.append(seq)
+            admitted.append(req.req_id)
+            used += cost
+
+        running.extend(prefill)
+        return StepPlan(step=step, prefill=prefill, decode=decode,
+                        admitted=admitted, preempted=preempted,
+                        budget=budget, budget_used=used)
+
+    @staticmethod
+    def _preempt(seq: SequenceState, pool: PagedKVPool,
+                 waiting: list[SequenceState],
+                 running: list[SequenceState]) -> None:
+        pool.free(seq.seq_id)
+        seq.request.preempt()
+        seq.reset()
+        running.remove(seq)
+        waiting.append(seq)
+
+
+def assign_replicas(
+    requests: Sequence[Request],
+    d: int,
+    cost_model: ServingCostModel,
+    *,
+    backend: str = "vectorized",
+) -> tuple[list[list[Request]], np.ndarray]:
+    """Post-balance a batch of requests across ``d`` engine replicas.
+
+    Items are the requests' modality-weighted lengths; the assignment is
+    ``post_balance``'s rearrangement (so the max per-replica admission
+    cost matches the training dispatcher's objective exactly -- the
+    scheduler-invariant test checks this).  Returns the per-replica
+    request lists (FIFO order restored within each) and the per-replica
+    weighted-length loads."""
+    if d < 1:
+        raise ValueError(f"need d >= 1 replicas, got {d}")
+    if not requests:
+        return [[] for _ in range(d)], np.zeros(d)
+    lens = np.maximum(1, np.rint(cost_model.weighted_lengths(
+        [r.text_len for r in requests],
+        [r.modality_tokens for r in requests])).astype(np.int64))
+    re = post_balance([lens], d, cost_model.model, backend=backend)
+    groups: list[list[Request]] = [[] for _ in range(d)]
+    loads = np.zeros(d)
+    for k in range(re.n):
+        r = requests[int(re.orig_slot[k])]
+        dst = int(re.dst_inst[k])
+        groups[dst].append(r)
+        loads[dst] += float(lens[int(re.orig_slot[k])])
+    for g in groups:
+        g.sort(key=lambda r: (r.arrival_step, r.arrival_time, r.req_id))
+    return groups, loads

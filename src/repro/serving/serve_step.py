@@ -1,8 +1,23 @@
-"""Serving: batched single-token decode + cache init.
+"""Serving steps: batched decode, paged decode, and chunked prefill.
 
-``make_serve_step(cfg)`` -> jit-able ``(params, tokens, cache, t) ->
-(next_tokens, logits, cache)``; greedy sampling (argmax) keeps the step
-deterministic for tests.
+``make_serve_step(cfg)`` -> jit-able ``(params, tokens, cache, t, key=None)
+-> (next_tokens, logits, cache)``.  Sampling is pluggable via
+``sample_fn`` (:func:`greedy_sample` default keeps tests deterministic;
+:func:`make_sample_fn` builds temperature/top-k sampling behind a PRNG
+key threaded through the step).
+
+``make_serve_step(cfg, paged=True)`` is the continuous-batching variant:
+the cache is the paged KV pool (``registry.paged_cache_specs``), reads
+go through a block-table gather, and ``t`` is a per-row position vector
+-- see :mod:`repro.models.decode`.
+
+``make_prefill_step(cfg)`` is the serving prefill: a ``lax.scan`` of the
+paged decode step over prompt positions, so a whole batch of admitted
+prompts is consumed in ONE jitted call while staying bit-identical to
+feeding the prompt token by token through ``serve_step`` (which is what
+makes engine output streams exactly reproduce the dense path).  It is
+distinct from ``repro.training.train_step.make_prefill_step``, the
+forward-only packed-stream loss path.
 """
 from __future__ import annotations
 
@@ -11,33 +26,111 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, with_attention_backend
 from repro.models.decode import decode_step
+from repro.utils import zeros_like_specs
 
-__all__ = ["make_serve_step", "init_cache"]
+__all__ = ["make_serve_step", "make_prefill_step", "init_cache",
+           "greedy_sample", "make_sample_fn"]
 
 
-def make_serve_step(cfg: ModelConfig, *, attention_backend: str | None = None):
+def greedy_sample(logits, key=None):
+    """Deterministic argmax sampling ([B,V] -> [B,1] int32)."""
+    del key
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+
+def make_sample_fn(*, temperature: float = 1.0, top_k: int | None = None):
+    """Stochastic ``sample_fn``: softmax(logits / temperature), optionally
+    restricted to the ``top_k`` highest-scoring tokens.
+
+    ``temperature == 0`` degrades to :func:`greedy_sample`; otherwise the
+    returned fn REQUIRES the PRNG key the engine threads through
+    serve/prefill steps (one fold per step keeps runs reproducible).
+    """
+    if temperature == 0.0:
+        return greedy_sample
+    if temperature < 0.0:
+        raise ValueError(f"temperature must be >= 0, got {temperature}")
+
+    def sample(logits, key):
+        if key is None:
+            raise ValueError("stochastic sample_fn needs a PRNG key "
+                             "(pass key= to the serve/prefill step)")
+        scaled = logits.astype(jnp.float32) / temperature
+        if top_k is not None:
+            kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)[:, None]
+
+    return sample
+
+
+def make_serve_step(cfg: ModelConfig, *, attention_backend: str | None = None,
+                    sample_fn=None, paged: bool = False):
     """``attention_backend`` overrides ``cfg.attention_impl`` for the
-    decode attention sites (resolved via ``cfg.decode_backend``)."""
-    cfg = with_attention_backend(cfg, attention_backend)
+    decode attention sites (resolved via ``cfg.decode_backend``);
+    ``sample_fn`` defaults to greedy.
 
-    def serve_step(params, tokens, cache, t):
+    Dense (default): ``(params, tokens [B,1], cache, t, key=None)``.
+    Paged: ``(params, tokens [B,1], cache, block_tables [B,W], t [B],
+    key=None)`` where ``cache`` is the pool layout and negative ``t``
+    entries mark inactive (padding) rows."""
+    cfg = with_attention_backend(cfg, attention_backend)
+    sample_fn = sample_fn or greedy_sample
+
+    if paged:
+        def paged_serve_step(params, tokens, cache, block_tables, t, key=None):
+            logits, cache = decode_step(cfg, params, tokens, cache, t,
+                                        block_tables=block_tables)
+            next_tokens = sample_fn(logits, key)
+            return next_tokens, logits, cache
+
+        return paged_serve_step
+
+    def serve_step(params, tokens, cache, t, key=None):
         logits, cache = decode_step(cfg, params, tokens, cache, t)
-        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        next_tokens = sample_fn(logits, key)
         return next_tokens, logits, cache
 
     return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, attention_backend: str | None = None,
+                      sample_fn=None):
+    """Serving prefill on the paged cache (see module docstring).
+
+    Returns ``prefill_step(params, prompts [B,Tp], lengths [B], cache,
+    block_tables [B,W], key=None) -> (first_tokens [B,1], last_logits
+    [B,V], cache)``: scans the paged decode step over positions
+    0..Tp-1; row b goes inactive once ``p >= lengths[b]`` (its writes
+    are dropped), and ``first_tokens`` is sampled from each row's
+    logits at its own last prompt position."""
+    cfg = with_attention_backend(cfg, attention_backend)
+    sample_fn = sample_fn or greedy_sample
+
+    def prefill_step(params, prompts, lengths, cache, block_tables, key=None):
+        B, Tp = prompts.shape
+        vocab = params["embed"].shape[0]
+
+        def body(carry, inp):
+            cache, last = carry
+            p, tok = inp
+            t = jnp.where(p < lengths, p, -1).astype(jnp.int32)
+            logits, cache = decode_step(cfg, params, tok[:, None], cache, t,
+                                        block_tables=block_tables)
+            last = jnp.where((p == lengths - 1)[:, None], logits, last)
+            return (cache, last), None
+
+        init = (cache, jnp.zeros((B, vocab), jnp.float32))
+        xs = (jnp.arange(Tp, dtype=jnp.int32), prompts.T)
+        (cache, last_logits), _ = jax.lax.scan(body, init, xs)
+        first_tokens = sample_fn(last_logits, key)
+        return first_tokens, last_logits, cache
+
+    return prefill_step
 
 
 def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
     """Zero-initialized decode cache matching registry.cache_specs."""
     from repro.configs.registry import cache_specs
 
-    specs = cache_specs(cfg, batch, seq_len)
-
-    def zeros(tree):
-        return jax.tree_util.tree_map(
-            lambda s: jnp.zeros(s.shape, s.dtype), tree,
-            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
-        )
-
-    return zeros(specs)
+    return zeros_like_specs(cache_specs(cfg, batch, seq_len))

@@ -1,9 +1,25 @@
 """Small shared numeric helpers."""
 from __future__ import annotations
 
-__all__ = ["round_up"]
+__all__ = ["round_up", "zeros_like_specs"]
 
 
 def round_up(x: int, m: int) -> int:
     """Smallest multiple of ``m`` that is >= ``x``."""
     return -(-x // m) * m
+
+
+def zeros_like_specs(tree):
+    """Zero-initialized arrays for a pytree of ``jax.ShapeDtypeStruct``.
+
+    Shared by the dense decode cache (``serving.serve_step.init_cache``)
+    and the paged KV pool (``serving.engine.kv_pool``), which both
+    materialize ``registry`` cache specs.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )

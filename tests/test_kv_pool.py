@@ -1,0 +1,265 @@
+"""Paged KV pool tests: allocator invariants (never double-books a
+block across alloc/free/defrag) and paged-decode exactness (block-table
+gather decode == dense-cache decode, bitwise)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config, paged_cache_specs
+from repro.models.model import init_params
+from repro.serving.engine import NULL_BLOCK, PagedKVPool, PoolExhausted
+from repro.serving.serve_step import init_cache, make_prefill_step, make_serve_step
+from repro.utils import zeros_like_specs
+
+# Acceptance matrix: plain dense, GQA (distinct kv heads + qk_norm), and
+# sliding-window attention (ring cache).
+PARITY_ARCHS = ["olmo_1b", "qwen3_8b", "h2o_danube_3_4b"]
+
+
+def _smoke(arch):
+    return get_config(arch).smoke()
+
+
+# ----------------------------------------------------------------------
+# Allocator invariants.
+# ----------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(st.integers(0, 2), st.integers(0, 5), st.integers(1, 4)),
+        min_size=1, max_size=40,
+    ),
+    num_blocks=st.integers(4, 24),
+)
+def test_pool_never_double_books(ops, num_blocks):
+    """Random alloc/free/defrag interleavings: free + allocated always
+    partition the usable id range, and no block has two owners."""
+    cfg = _smoke("olmo_1b")
+    pool = PagedKVPool(cfg, num_blocks=num_blocks, block_size=4)
+    for op, sid, n in ops:
+        if op == 0:
+            try:
+                got = pool.alloc(sid, n)
+                assert len(got) == n
+                assert NULL_BLOCK not in got
+            except PoolExhausted:
+                assert pool.num_free < n
+        elif op == 1:
+            freed = pool.free(sid)
+            assert sid not in pool.owners()
+            assert all(b != NULL_BLOCK for b in freed)
+        else:
+            mapping = pool.defrag()
+            # After compaction the allocated ids are exactly 1..used.
+            assert sorted(mapping.values()) == list(range(1, pool.num_used + 1))
+        pool.check()
+        assert pool.num_free + pool.num_used == pool.usable_blocks
+
+
+def test_alloc_exhaustion_and_ensure():
+    cfg = _smoke("olmo_1b")
+    pool = PagedKVPool(cfg, num_blocks=5, block_size=8)
+    pool.alloc(0, 3)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(1, 2)
+    assert pool.table(0) == [1, 2, 3]  # lowest ids first, deterministic
+    assert pool.ensure(0, 24) == []  # 3 blocks already cover 24 slots
+    assert pool.ensure(0, 25) == [4]
+    assert pool.blocks_short(0, 32) == 0
+    pool.free(0)
+    assert pool.num_free == pool.usable_blocks
+    pool.check()
+
+
+def test_table_array_pads_with_null():
+    cfg = _smoke("olmo_1b")
+    pool = PagedKVPool(cfg, num_blocks=9, block_size=8)
+    pool.alloc(7, 2)
+    pool.alloc(9, 3)
+    bt = pool.table_array([9, 7], width=4)
+    assert bt.shape == (2, 4)
+    assert bt[0].tolist() == pool.table(9) + [NULL_BLOCK]
+    assert bt[1].tolist() == pool.table(7) + [NULL_BLOCK, NULL_BLOCK]
+    with pytest.raises(ValueError):
+        pool.table_array([9], width=2)
+
+
+def test_defrag_moves_content_and_rewrites_tables():
+    """Block content must follow the compaction mapping and freed slots
+    must come back as null (zero) content."""
+    cfg = _smoke("olmo_1b")
+    pool = PagedKVPool(cfg, num_blocks=10, block_size=4)
+    pool.alloc(0, 2)
+    pool.alloc(1, 2)
+    pool.alloc(2, 2)
+    # Stamp each allocated block's kv_pos with its owner-specific value.
+    marks = {}
+    for sid in (0, 1, 2):
+        for b in pool.table(sid):
+            pool.cache["kv_pos"] = pool.cache["kv_pos"].at[b].set(100 + b)
+            marks[b] = 100 + b
+    pool.free(1)  # holes at the freed ids
+    before = {sid: list(pool.table(sid)) for sid in (0, 2)}
+    mapping = pool.defrag()
+    pool.check()
+    assert sorted(mapping.values()) == [1, 2, 3, 4]
+    for sid in (0, 2):
+        assert pool.table(sid) == [mapping[b] for b in before[sid]]
+        for old, new in zip(before[sid], pool.table(sid)):
+            np.testing.assert_array_equal(
+                np.asarray(pool.cache["kv_pos"][new]), marks[old])
+    # Free ids are one contiguous high range with zeroed seg content.
+    free = sorted(set(range(1, pool.num_blocks)) - set(mapping.values()))
+    assert free == list(range(5, 10))
+    np.testing.assert_array_equal(
+        np.asarray(pool.cache["kv_seg"][np.array(free)]), 0)
+
+
+def test_free_zeroes_segment_marks():
+    """A recycled block must not leak stale kv_seg into its next owner
+    (stale k/v is masked to an exact zero; stale seg would unmask it)."""
+    cfg = _smoke("olmo_1b")
+    pool = PagedKVPool(cfg, num_blocks=4, block_size=4)
+    pool.alloc(0, 2)
+    pool.cache["kv_seg"] = pool.cache["kv_seg"].at[np.array(pool.table(0))].set(1)
+    freed = pool.free(0)
+    np.testing.assert_array_equal(
+        np.asarray(pool.cache["kv_seg"][np.array(freed)]), 0)
+
+
+# ----------------------------------------------------------------------
+# Paged decode exactness.
+# ----------------------------------------------------------------------
+def _shuffled_pool(cfg, B, W, bs, seed=0):
+    """Pool + deliberately shuffled (non-contiguous) block tables."""
+    pool = zeros_like_specs(paged_cache_specs(cfg, 1 + B * W, bs))
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(np.arange(1, 1 + B * W)).reshape(B, W)
+    return pool, jnp.asarray(ids, jnp.int32)
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_paged_decode_matches_dense_bitwise(arch):
+    """Gather-based block-table decode == dense-cache decode, bitwise,
+    including past the sliding-window ring wrap."""
+    cfg = _smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, bs = 3, 16
+    S = 64  # == the smoke sliding window for h2o_danube
+    W = S // bs
+    cache = init_cache(cfg, B, S)
+    pool, bt = _shuffled_pool(cfg, B, W, bs)
+    serve = jax.jit(make_serve_step(cfg))
+    pserve = jax.jit(make_serve_step(cfg, paged=True))
+    tok_d = tok_p = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 1,
+                                       cfg.vocab_size)
+    n_steps = 80 if cfg.sliding_window else 40  # wrap the ring if windowed
+    for t in range(n_steps):
+        tok_d, ld, cache = serve(params, tok_d, cache, jnp.int32(t))
+        tok_p, lp, pool = pserve(params, tok_p, pool, bt,
+                                 jnp.full((B,), t, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp),
+                                      err_msg=f"{arch} step {t}")
+    # The gathered pool cache must equal the dense cache, bitwise.
+    for name in ("k", "v"):
+        gathered = np.asarray(pool[name])[:, np.asarray(bt)].reshape(
+            np.asarray(cache[name]).shape)
+        np.testing.assert_array_equal(gathered, np.asarray(cache[name]))
+    for name in ("kv_pos", "kv_seg"):
+        gathered = np.asarray(pool[name])[np.asarray(bt)].reshape(B, S)
+        np.testing.assert_array_equal(gathered, np.asarray(cache[name]))
+
+
+def test_paged_inactive_rows_drop_writes():
+    """Rows with t < 0 must leave the pool untouched and not disturb
+    active rows."""
+    cfg = _smoke("olmo_1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, bs, W = 2, 8, 2
+    pool, bt = _shuffled_pool(cfg, B, W, bs)
+    pserve = jax.jit(make_serve_step(cfg, paged=True))
+    tok = jnp.ones((B, 1), jnp.int32)
+    # Row 1 inactive: t = -1.
+    _, logits, pool2 = pserve(params, tok, pool, bt,
+                              jnp.array([0, -1], jnp.int32))
+    seg = np.asarray(pool2["kv_seg"])
+    assert seg[np.asarray(bt)[0, 0], 0] == 1  # row 0 wrote slot 0
+    np.testing.assert_array_equal(seg[np.asarray(bt)[1]], 0)  # row 1 did not
+    assert bool(np.isfinite(np.asarray(logits)).all())
+
+
+def test_prefill_scan_matches_tokenwise_serve():
+    """The chunked prefill scan == feeding the prompt token by token
+    through the paged serve step (same pool, same tables)."""
+    cfg = _smoke("qwen3_8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, bs, W = 2, 16, 3
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (B, 10), 1,
+                                 cfg.vocab_size)
+    lengths = jnp.array([10, 6], jnp.int32)
+    pool_a, bt = _shuffled_pool(cfg, B, W, bs)
+    prefill = jax.jit(make_prefill_step(cfg))
+    first_a, last_a, pool_a = prefill(params, prompts, lengths, pool_a, bt)
+
+    pool_b = zeros_like_specs(paged_cache_specs(cfg, 1 + B * W, bs))
+    pserve = jax.jit(make_serve_step(cfg, paged=True))
+    last_b = np.zeros(np.asarray(last_a).shape, np.float32)
+    for p in range(10):
+        t = jnp.where(p < lengths, p, -1).astype(jnp.int32)
+        _, logits, pool_b = pserve(params, prompts[:, p : p + 1], pool_b, bt, t)
+        sel = (p == np.asarray(lengths) - 1)
+        last_b[sel] = np.asarray(logits)[sel]
+    np.testing.assert_array_equal(np.asarray(last_a), last_b)
+    for name in ("k", "v", "kv_pos", "kv_seg"):
+        np.testing.assert_array_equal(np.asarray(pool_a[name]),
+                                      np.asarray(pool_b[name]))
+
+
+def test_defrag_mid_decode_stays_exact():
+    """free + defrag between steps must not change a surviving
+    sequence's continuation (vs the dense path)."""
+    cfg = _smoke("olmo_1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    bs, W = 8, 4
+    S = bs * W
+    pool = PagedKVPool(cfg, num_blocks=1 + 3 * W, block_size=bs)
+    pool.alloc(0, W)
+    pool.alloc(1, W)
+    pool.alloc(2, W)
+    pserve = jax.jit(make_serve_step(cfg, paged=True))
+    dense = jax.jit(make_serve_step(cfg))
+    cache = init_cache(cfg, 1, S)  # dense reference for seq 1 alone
+
+    tok3 = jnp.array([[3], [7], [11]], jnp.int32)
+    tok1 = jnp.array([[7]], jnp.int32)
+    bt = jnp.asarray(pool.table_array([0, 1, 2], W))
+    for t in range(6):
+        tok3, _, pool.cache = pserve(params, tok3, pool.cache, bt,
+                                     jnp.full((3,), t, jnp.int32))
+        tok1, l1, cache = dense(params, tok1, cache, jnp.int32(t))
+    # Drop seqs 0 and 2 and compact; seq 1's blocks move.
+    pool.free(0)
+    pool.free(2)
+    old_table = pool.table(1)
+    pool.defrag()
+    pool.check()
+    assert pool.table(1) != old_table  # actually moved
+    bt = jnp.asarray(pool.table_array([1], W))
+    tok3 = tok3[1:2]
+    for t in range(6, 14):
+        tok3, lp, pool.cache = pserve(params, tok3, pool.cache, bt,
+                                      jnp.full((1,), t, jnp.int32))
+        tok1, l1, cache = dense(params, tok1, cache, jnp.int32(t))
+        np.testing.assert_array_equal(np.asarray(lp), np.asarray(l1))
+
+
+def test_paged_cache_specs_rejects_stateful_families():
+    with pytest.raises(ValueError):
+        paged_cache_specs(_smoke("falcon_mamba_7b"), 8, 16)
+    with pytest.raises(ValueError):
+        paged_cache_specs(_smoke("zamba2_2_7b"), 8, 16)
