@@ -34,10 +34,39 @@ import numpy as np
 
 __all__ = [
     "CostModel",
+    "FEATURE_NAMES",
+    "N_FEATURES",
     "ServingCostModel",
     "batch_length",
+    "encoder_cost_model",
+    "length_features",
+    "llm_cost_model",
+    "serving_cost_model",
     "transformer_cost_coeffs",
 ]
+
+# Per-batch feature basis shared by every f(S) variant (and by the
+# telemetry calibrator, which regresses measured wall times onto it):
+#   x0 = L        batch length per Eq. (1) (sum packed, b*max padded)
+#   x1 = L^2/b    padded quadratic term
+#   x2 = sum l^2  packed quadratic term
+#   x3 = b*max^2  ConvTransformer quadratic term (== x1 when padded)
+# so every variant is  f = alpha*x0 + beta*x[quad_index].
+FEATURE_NAMES = ("L", "L2_over_b", "sum_l2", "b_max_l2")
+N_FEATURES = len(FEATURE_NAMES)
+
+
+def length_features(lengths: Sequence[int] | np.ndarray,
+                    padding: bool = False) -> np.ndarray:
+    """The (4,) feature vector of one mini-batch."""
+    arr = np.asarray(lengths, dtype=np.float64)
+    if arr.size == 0:
+        return np.zeros(N_FEATURES)
+    b = float(arr.size)
+    s = float(arr.sum())
+    mx = float(arr.max())
+    L = b * mx if padding else s
+    return np.array([L, L * L / b, float((arr * arr).sum()), b * mx * mx])
 
 
 def _segment_max(values: np.ndarray, ids: np.ndarray, n_segments: int) -> np.ndarray:
@@ -79,6 +108,40 @@ class CostModel:
     @property
     def lam(self) -> float:
         return self.beta / self.alpha if self.alpha else 0.0
+
+    @property
+    def quad_index(self) -> int:
+        """Which feature column carries this variant's quadratic term."""
+        if self.conv_attention:
+            return 3
+        return 1 if self.padding else 2
+
+    def with_coeffs(self, alpha: float, beta: float) -> "CostModel":
+        """Same variant (padding / conv flags), new coefficients -- the
+        single injection point calibration swaps through."""
+        return dataclasses.replace(self, alpha=float(alpha), beta=float(beta))
+
+    def feature_vector(self, lengths: Sequence[int] | np.ndarray) -> np.ndarray:
+        return length_features(lengths, self.padding)
+
+    def segment_features(self, lengths: np.ndarray, batch_ids: np.ndarray,
+                         d: int) -> np.ndarray:
+        """Per-destination-batch feature vectors, shape (d, 4) -- the
+        vectorized :func:`length_features` over a whole assignment."""
+        lengths = np.asarray(lengths, dtype=np.float64)
+        batch_ids = np.asarray(batch_ids)
+        cnt = np.bincount(batch_ids, minlength=d).astype(np.float64)
+        bsum = np.bincount(batch_ids, weights=lengths, minlength=d)
+        sq = np.bincount(batch_ids, weights=lengths * lengths, minlength=d)
+        bmax = _segment_max(lengths, batch_ids, d)
+        L = cnt * bmax if self.padding else bsum
+        safe_cnt = np.maximum(cnt, 1.0)
+        return np.stack([L, L * L / safe_cnt, sq, cnt * bmax * bmax], axis=1)
+
+    def cost_from_features(self, features: np.ndarray) -> np.ndarray:
+        """f(S) from (..., 4) feature vectors; agrees with :meth:`cost`."""
+        f = np.asarray(features, dtype=np.float64)
+        return self.alpha * f[..., 0] + self.beta * f[..., self.quad_index]
 
     def cost(self, lengths: Sequence[int] | np.ndarray) -> float:
         """f(S) per paper Eq. (2) / App. A."""
@@ -222,3 +285,55 @@ def transformer_cost_coeffs(
     alpha = 1.0
     beta = quad / lin
     return alpha, beta
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost-model derivation.  ONE home for hand-building CostModels
+# from a config: the orchestrator's per-phase dispatchers, the serving
+# scheduler, and the telemetry priors all route through these three
+# helpers, so calibrated coefficients have a single injection point
+# (``CostModel.with_coeffs`` on the helpers' output).
+
+
+def llm_cost_model(cfg) -> CostModel:
+    """f(S) of the LLM backbone phase (cfg: ModelConfig)."""
+    if cfg.family in ("ssm", "hybrid"):
+        # No (or windowed) quadratic term; balancing on token sums.
+        return CostModel(alpha=1.0, beta=0.0)
+    moe_k = cfg.experts_per_token if cfg.family == "moe" else 1
+    a, b = transformer_cost_coeffs(
+        cfg.d_model, max(cfg.d_ff, 1), cfg.n_layers,
+        moe_experts_active=max(moe_k, 1),
+    )
+    return CostModel(alpha=a, beta=b)
+
+
+def encoder_cost_model(e) -> CostModel:
+    """f(S) of one encoder phase (e: EncoderConfig)."""
+    a, b = transformer_cost_coeffs(e.d_model, e.d_ff, max(e.n_layers, 1))
+    if e.conv_attention:
+        return CostModel(alpha=a, beta=b, conv_attention=True)
+    return CostModel(alpha=a, beta=b, padding=e.padded)
+
+
+def serving_cost_model(cfg) -> ServingCostModel:
+    """Derive the serving admission costs from an architecture.
+
+    alpha/beta come from :func:`transformer_cost_coeffs` (so the
+    quadratic attention term prices long prompts super-linearly, as in
+    training).  Each encoder's modality weight is the encoder+connector
+    compute riding on one post-connector LLM token, relative to a
+    backbone token: ``1 + (enc_layers * enc_width^2 * downsample) /
+    (layers * width^2)`` -- ``downsample`` because each LLM token
+    aggregates that many encoder tokens."""
+    alpha, beta = transformer_cost_coeffs(
+        cfg.d_model, cfg.d_ff, max(1, cfg.n_layers),
+        moe_experts_active=max(1, cfg.experts_per_token),
+        ssm=cfg.family == "ssm")
+    base = max(1, cfg.n_layers) * cfg.d_model ** 2
+    weights = {
+        e.name: 1.0 + (e.n_layers * e.d_model ** 2 * e.downsample) / base
+        for e in cfg.encoders
+    }
+    return ServingCostModel(CostModel(alpha=alpha, beta=beta),
+                            modality_weights=weights)

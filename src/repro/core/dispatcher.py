@@ -57,6 +57,11 @@ class DispatchPlan:
     costs: np.ndarray  # f(S'_i) per destination shard
     utilization: float  # mean/max of costs
     solve_ms: float  # dispatcher computation time (paper Table 2 analog)
+    # Per-shard feature vectors [L, L^2/b, sum l^2, b*max^2], shape
+    # (d, 4): the telemetry calibrator pairs these with measured phase
+    # times (costs == cost_model.cost_from_features(features)).
+    features: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0, 4)))
 
     @property
     def max_cost(self) -> float:
@@ -152,10 +157,13 @@ class BatchPostBalancingDispatcher:
             pi = identity_rearrangement(lengths_per_instance, self.d)
 
         # Batched accounting: per-shard sums/counts/maxima in O(n) numpy
-        # instead of a python loop over d ragged arrays.
+        # instead of a python loop over d ragged arrays.  Features are
+        # kept on the plan so telemetry can regress measured phase times
+        # onto them.
         lens = np.asarray(pi.lengths, dtype=np.float64)
         ids = pi.dst_inst
-        costs = self.cost_model.segment_costs(lens, ids, self.d)
+        features = self.cost_model.segment_features(lens, ids, self.d)
+        costs = self.cost_model.cost_from_features(features)
         if self.cost_model.padding or self.cost_model.conv_attention:
             cnt = np.bincount(ids, minlength=self.d)
             bmax = _segment_max(lens, ids, self.d)
@@ -175,6 +183,7 @@ class BatchPostBalancingDispatcher:
             costs=costs,
             utilization=util,
             solve_ms=solve_ms,
+            features=features,
         )
 
     # -- plan-ahead mode ------------------------------------------------

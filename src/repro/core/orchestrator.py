@@ -25,9 +25,9 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.configs.base import EncoderConfig, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.core.communicator import CommPlan, build_comm_plan
-from repro.core.cost_model import CostModel, transformer_cost_coeffs
+from repro.core.cost_model import CostModel, encoder_cost_model, llm_cost_model
 from repro.core.dispatcher import BatchPostBalancingDispatcher, DispatchPlan
 from repro.core.rearrangement import Rearrangement, compose
 from repro.data.packing import pack_padded_stream, pack_stream
@@ -87,6 +87,14 @@ class OrchestratorReport:
     # step's forward pass hid it), and whether it was overlapped.
     exposed_ms: float = 0.0
     overlapped: bool = False
+    # Telemetry: per-phase per-shard feature vectors (d, 4) -- the
+    # consumer pairs them with measured phase times and feeds them back
+    # through observe_phase_times -- plus the adaptive-coefficient
+    # version the plans were computed under and whether a stale
+    # plan-ahead plan had to be re-planned (drift / coefficient swap).
+    phase_features: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    coeff_version: int = -1
+    replanned: bool = False
 
 
 @dataclasses.dataclass
@@ -103,6 +111,18 @@ class PhasePlans:
     comm_plans: dict[str, CommPlan]
     phase_solve_ms: dict[str, float]
     solve_ms: float
+    # Adaptive-coefficient version the plans were solved under (-1 when
+    # no AdaptiveOrchestration is attached); plan_and_pack re-plans when
+    # the version moved on (drift / calibration swap-in) before packing.
+    coeff_version: int = -1
+
+    @property
+    def features(self) -> dict[str, np.ndarray]:
+        """Per-phase (d, 4) feature matrices for telemetry calibration."""
+        out = {"llm": self.llm_plan.features}
+        for name, plan in self.enc_plans.items():
+            out[name] = plan.features
+        return out
 
 
 class PlanAheadHandle:
@@ -128,25 +148,6 @@ class PlanAheadHandle:
         return self._box["plans"], exposed_ms
 
 
-def llm_cost_model(cfg: ModelConfig) -> CostModel:
-    if cfg.family in ("ssm", "hybrid"):
-        # No (or windowed) quadratic term; balancing on token sums.
-        return CostModel(alpha=1.0, beta=0.0)
-    moe_k = cfg.experts_per_token if cfg.family == "moe" else 1
-    a, b = transformer_cost_coeffs(
-        cfg.d_model, max(cfg.d_ff, 1), cfg.n_layers,
-        moe_experts_active=max(moe_k, 1),
-    )
-    return CostModel(alpha=a, beta=b)
-
-
-def encoder_cost_model(e: EncoderConfig) -> CostModel:
-    a, b = transformer_cost_coeffs(e.d_model, e.d_ff, max(e.n_layers, 1))
-    if e.conv_attention:
-        return CostModel(alpha=a, beta=b, conv_attention=True)
-    return CostModel(alpha=a, beta=b, padding=e.padded)
-
-
 class MLLMGlobalOrchestrator:
     def __init__(
         self,
@@ -161,6 +162,7 @@ class MLLMGlobalOrchestrator:
         vocab: int | None = None,
         backend: str = "vectorized",
         concurrent_dispatch: bool = False,
+        adaptive=None,
     ) -> None:
         self.cfg = cfg
         self.d = d
@@ -172,8 +174,16 @@ class MLLMGlobalOrchestrator:
         # concurrent_dispatch is set (paper Fig. 4: per-phase dispatchers
         # are independent).
         self.concurrent_dispatch = concurrent_dispatch
+        # Telemetry: an AdaptiveOrchestration (repro.telemetry.adaptive)
+        # supplies each phase's cost model -- analytic prior until the
+        # online fit is confident, calibrated coefficients after.  The
+        # dispatchers are refreshed from it before every solve, and the
+        # consumer feeds measured phase times back through
+        # :meth:`observe_phase_times`.
+        self.adaptive = adaptive
+        self.replans = 0  # stale plan-ahead plans re-planned (drift/swap)
         self.llm_dispatcher = BatchPostBalancingDispatcher(
-            d, llm_cost_model(cfg),
+            d, adaptive.cost_model("llm") if adaptive else llm_cost_model(cfg),
             algorithm=llm_algorithm,
             instances_per_node=instances_per_node,
             balance=balance,
@@ -182,7 +192,9 @@ class MLLMGlobalOrchestrator:
         self.enc_dispatchers: dict[str, BatchPostBalancingDispatcher] = {}
         for e in cfg.encoders:
             self.enc_dispatchers[e.name] = BatchPostBalancingDispatcher(
-                d, encoder_cost_model(e),
+                d,
+                adaptive.cost_model(e.name) if adaptive
+                else encoder_cost_model(e),
                 algorithm=encoder_algorithm_override,
                 instances_per_node=instances_per_node,
                 balance=balance and balance_encoders,
@@ -259,6 +271,16 @@ class MLLMGlobalOrchestrator:
         cfg = self.cfg
         t0 = time.perf_counter()
         phase_ms: dict[str, float] = {}
+        coeff_version = -1
+        if self.adaptive is not None:
+            # Refresh every dispatcher's f(S) from the adaptive models
+            # and stamp the plans with the coefficient version, so a
+            # plan computed ahead under stale coefficients is detected
+            # (and re-planned) at consumption time.
+            coeff_version = self.adaptive.version
+            self.llm_dispatcher.cost_model = self.adaptive.cost_model("llm")
+            for name, disp in self.enc_dispatchers.items():
+                disp.cost_model = self.adaptive.cost_model(name)
 
         # ---- LLM backbone plan (interleaved lengths, S6). -------------
         key = "text" if cfg.family == "audio" else "total"
@@ -323,6 +345,8 @@ class MLLMGlobalOrchestrator:
                     chunk_cap=caps.chunk[e.name],
                 )
         phase_ms["compose"] = (time.perf_counter() - tc) * 1e3
+        if self.adaptive is not None:
+            self.adaptive.record_plan_spans(phase_ms)
         return PhasePlans(
             llm_plan=llm_plan,
             enc_plans=enc_plans,
@@ -331,6 +355,7 @@ class MLLMGlobalOrchestrator:
             comm_plans=comm_plans,
             phase_solve_ms=phase_ms,
             solve_ms=(time.perf_counter() - t0) * 1e3,
+            coeff_version=coeff_version,
         )
 
     def plan_ahead(
@@ -365,8 +390,26 @@ class MLLMGlobalOrchestrator:
     ) -> tuple[dict[str, np.ndarray], OrchestratorReport]:
         cfg = self.cfg
         overlapped = plans is not None
+        replanned = False
+        if (plans is not None and self.adaptive is not None
+                and plans.coeff_version != self.adaptive.version):
+            # The coefficients moved (calibration swap-in or drift)
+            # after this plan was computed ahead: the plan is still
+            # *correct* (any rearrangement is), but it balances against
+            # a stale f(S) -- re-plan with the current coefficients.
+            # The synchronous re-solve is genuinely exposed latency, so
+            # it is charged to exposed_ms and the step loses its
+            # overlapped flag.
+            plans = None
+            replanned = True
+            overlapped = False
+            self.replans += 1
         if plans is None:
+            t_replan = time.perf_counter()
             plans = self.plan_phases(examples_per_instance, caps)
+            if replanned:
+                exposed_ms = ((exposed_ms or 0.0)
+                              + (time.perf_counter() - t_replan) * 1e3)
         llm_plan, enc_plans = plans.llm_plan, plans.enc_plans
         pi_m = llm_plan.pi
         pi_es, composed, comm_plans = plans.pi_es, plans.composed, plans.comm_plans
@@ -396,7 +439,37 @@ class MLLMGlobalOrchestrator:
             exposed_ms=exposed_ms if exposed_ms is not None else solve_ms,
             overlapped=overlapped,
         )
+        report.phase_features = plans.features
+        report.coeff_version = plans.coeff_version
+        report.replanned = replanned
         return batch, report
+
+    # ------------------------------------------------------------------
+    def observe_phase_times(
+        self,
+        times_by_phase,
+        *,
+        plans: PhasePlans | None = None,
+        report: OrchestratorReport | None = None,
+        step: int | None = None,
+    ) -> dict[str, bool]:
+        """Feed measured per-phase execution times back to calibration.
+
+        ``times_by_phase[p]`` is a per-shard wall-time vector aligned
+        with the phase's (d, 4) feature matrix, or a scalar synchronous
+        step time (attributed to the straggler shard).  Features come
+        from ``plans`` or ``report`` (whichever the caller kept).
+        ``step`` defaults to the AdaptiveOrchestration's own counter.
+        Returns per-phase drift flags; after a drift or a confident
+        calibration swap the NEXT plan consumes the new coefficients
+        (and a stale plan-ahead plan is re-planned in plan_and_pack)."""
+        if self.adaptive is None:
+            raise ValueError("orchestrator has no AdaptiveOrchestration "
+                             "attached (pass adaptive= at construction)")
+        if (plans is None) == (report is None):
+            raise ValueError("pass exactly one of plans= / report=")
+        features = plans.features if plans is not None else report.phase_features
+        return self.adaptive.observe(features, times_by_phase, step=step)
 
     # ------------------------------------------------------------------
     def _pack_text(self, examples, ex_id, pi_m, caps, rng):

@@ -16,8 +16,10 @@ import dataclasses
 import json
 from pathlib import Path
 
-from repro.configs import get_config
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core.cost_model import llm_cost_model
 from repro.launch.dryrun import run_pair
+from repro.telemetry import nnls_fit
 
 
 def _variant(cfg, **kw):
@@ -63,6 +65,48 @@ EXPERIMENTS = {
 }
 
 
+def coeff_delta(arch, baseline_dir, *, mesh="16x16", comm="a2a"):
+    """Calibrated-vs-analytic cost coefficients from cached dry-runs.
+
+    Fits (alpha, beta) of the paper's f(S) to the XLA-priced FLOPs of
+    every cached shape for this arch (features: linear = tokens,
+    quadratic = batch * seq^2; train rows are normalized by 3x for the
+    backward pass) via the telemetry NNLS, and compares the fitted
+    quadratic/linear ratio ``lam`` against ``llm_cost_model``'s analytic
+    one.  A large ratio means the hand-derived coefficients mis-model
+    this architecture and the balancing objective is skewed -- exactly
+    what ``AdaptiveCostModel`` corrects online.  Needs >= 2 cached
+    shapes to be identifiable (returns None otherwise)."""
+    import numpy as np
+
+    X, y, used = [], [], []
+    for f in sorted(Path(baseline_dir).glob(f"{arch}__*__{mesh}__{comm}.json")):
+        row = json.loads(f.read_text())
+        if row.get("status") != "ok" or row.get("kind") not in ("train", "prefill"):
+            continue
+        shape = INPUT_SHAPES.get(row.get("shape"))
+        flops = row.get("flops_per_chip")
+        if shape is None or not flops:
+            continue
+        tokens = float(shape.seq_len) * shape.global_batch
+        X.append([tokens, shape.global_batch * float(shape.seq_len) ** 2])
+        y.append(float(flops) / (3.0 if row["kind"] == "train" else 1.0))
+        used.append(shape.name)
+    if len(set(used)) < 2:
+        return None
+    c = nnls_fit(np.asarray(X), np.asarray(y))
+    if c[0] <= 0:
+        return None
+    lam_cal = float(c[1] / c[0])
+    lam_ana = llm_cost_model(get_config(arch)).lam
+    return {
+        "coeff_lam_analytic": lam_ana,
+        "coeff_lam_calibrated": lam_cal,
+        "coeff_lam_ratio": (lam_cal / lam_ana) if lam_ana else None,
+        "coeff_fit_shapes": used,
+    }
+
+
 def show(row, base=None):
     if row["status"] != "ok":
         print(f"  !! {row['status']}: {row.get('error', row.get('reason'))}")
@@ -70,6 +114,10 @@ def show(row, base=None):
     terms = {k: row[k] for k in ("compute_s", "memory_s", "collective_s")}
     line = "  " + "  ".join(f"{k[:-2]}={v:8.3f}s" for k, v in terms.items())
     line += f"  dominant={row['dominant']}  useful={row['useful_ratio']:.3f}"
+    if row.get("coeff_lam_ratio") is not None:
+        line += (f"  lam(cal/ana)={row['coeff_lam_ratio']:.2f}x"
+                 f" [{row['coeff_lam_calibrated']:.2e} vs"
+                 f" {row['coeff_lam_analytic']:.2e}]")
     if base and base["status"] == "ok":
         deltas = []
         for k in terms:
@@ -105,6 +153,15 @@ def main():
             print("  (computing baseline)", flush=True)
             base = run_pair(arch, shape, multi_pod=False)
             base_f.write_text(json.dumps(base, indent=1, default=str))
+        # Calibrated-vs-analytic f(S) coefficients for this arch (from
+        # every cached dry-run shape); a ratio far from 1x flags an
+        # architecture whose balancing objective is mis-modeled.
+        # Applied to cached AND fresh rows (the fit improves as more
+        # dry-run shapes land), and persisted back to the files.
+        coeffs = coeff_delta(arch, args.baseline_dir)
+        if coeffs and coeffs != {k: base.get(k) for k in coeffs}:
+            base.update(coeffs)
+            base_f.write_text(json.dumps(base, indent=1, default=str))
         print("  baseline:")
         show(base)
         for vname, spec in variants.items():
@@ -119,6 +176,10 @@ def main():
                 row = run_pair(arch, shape, multi_pod=False, cfg_override=cfg,
                                **run_kw)
                 row["variant"] = vname
+            if coeffs and coeffs != {k: row.get(k) for k in coeffs}:
+                row.update(coeffs)
+                f.write_text(json.dumps(row, indent=1, default=str))
+            elif not f.exists():
                 f.write_text(json.dumps(row, indent=1, default=str))
             print(f"  {vname}:")
             show(row, base)

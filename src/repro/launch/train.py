@@ -11,6 +11,7 @@ the same entrypoint runs the full configs under the production mesh.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -22,6 +23,7 @@ from repro.core.orchestrator import MLLMGlobalOrchestrator
 from repro.data.pipeline import PrefetchingLoader
 from repro.data.synthetic import Example
 from repro.sharding.specs import batch_specs, opt_state_specs, param_specs, to_shardings
+from repro.telemetry import AdaptiveOrchestration
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_step import init_train_state, make_train_step
 
@@ -63,6 +65,13 @@ def main() -> None:
     ap.add_argument("--mesh", choices=["none", "host"], default="none",
                     help="'host': shard over all local devices on a "
                          "(data, model) mesh")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="online cost-model calibration: measured step "
+                         "times refit the balancing coefficients "
+                         "(repro.telemetry)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the telemetry Chrome-trace/Perfetto JSON "
+                         "here on exit (requires --adaptive)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -77,7 +86,9 @@ def main() -> None:
         n = len(jax.devices())
         mesh = jax.make_mesh((n, 1), ("data", "model"))
 
-    orch = MLLMGlobalOrchestrator(cfg, args.d, vocab=cfg.vocab_size)
+    adaptive = AdaptiveOrchestration(cfg) if args.adaptive else None
+    orch = MLLMGlobalOrchestrator(cfg, args.d, vocab=cfg.vocab_size,
+                                  adaptive=adaptive)
     sampler = _sampler_for(cfg)
     probe = [sampler(np.random.default_rng(s), args.per) for s in range(args.d)]
     caps = orch.default_capacities(probe, margin=3.0)
@@ -99,7 +110,21 @@ def main() -> None:
         for it in range(args.steps):
             batch_np, report, _ = next(loader)
             batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            ts = time.perf_counter()
             params, opt_state, m = step(params, opt_state, batch)
+            if adaptive is not None:
+                # Calibration needs the device-complete step time; the
+                # sync is only paid on the --adaptive path (the default
+                # path keeps async dispatch overlap).
+                jax.block_until_ready(m["loss"])
+                step_ms = (time.perf_counter() - ts) * 1e3
+                if it > 0:
+                    # Skip step 0 (dominated by XLA compilation).  The
+                    # whole-step time is attributed to the LLM backbone
+                    # phase -- on a CPU smoke run the encoders are
+                    # noise; a per-phase profiler would feed each phase.
+                    orch.observe_phase_times({"llm": step_ms},
+                                             report=report, step=it)
             if it % 5 == 0 or it == args.steps - 1:
                 print(f"step {it:4d} loss={float(m['loss']):.4f} "
                       f"gnorm={float(m['grad_norm']):.2f} "
@@ -107,6 +132,14 @@ def main() -> None:
                       f"{(time.time()-t0)/(it+1):.2f}s/step", flush=True)
     finally:
         loader.close()
+    if adaptive is not None:
+        print("telemetry calibration summary:")
+        print(json.dumps(adaptive.summary(), indent=1, default=str))
+        print(f"stale plan-ahead re-plans: {orch.replans}")
+        if args.trace_out:
+            adaptive.export_chrome_trace(args.trace_out)
+            print(f"wrote phase trace to {args.trace_out} "
+                  f"(open in ui.perfetto.dev)")
     print("training loop complete")
 
 

@@ -6,7 +6,12 @@ post-balanced admission scheduling (ISSUE 3).
     scheduler.py  token-budget admission + post_balance replica assignment
     engine.py     Engine.step() loop, MultiReplicaEngine, EngineReport
 """
-from repro.serving.engine.engine import Engine, EngineReport, MultiReplicaEngine
+from repro.serving.engine.engine import (
+    Engine,
+    EngineReport,
+    MultiReplicaEngine,
+    StepTiming,
+)
 from repro.serving.engine.kv_pool import NULL_BLOCK, PagedKVPool, PoolExhausted
 from repro.serving.engine.request import (
     Request,
@@ -22,7 +27,7 @@ from repro.serving.engine.scheduler import (
 )
 
 __all__ = [
-    "Engine", "EngineReport", "MultiReplicaEngine",
+    "Engine", "EngineReport", "MultiReplicaEngine", "StepTiming",
     "NULL_BLOCK", "PagedKVPool", "PoolExhausted",
     "Request", "RequestState", "SequenceState", "requests_from_examples",
     "Scheduler", "StepPlan", "assign_replicas", "serving_cost_model",

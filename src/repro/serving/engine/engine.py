@@ -49,7 +49,25 @@ from repro.serving.engine.scheduler import (
 from repro.serving.serve_step import make_prefill_step, make_serve_step
 from repro.utils import round_up
 
-__all__ = ["Engine", "MultiReplicaEngine", "EngineReport"]
+__all__ = ["Engine", "MultiReplicaEngine", "EngineReport", "StepTiming"]
+
+
+@dataclasses.dataclass
+class StepTiming:
+    """One engine step's wall-time breakdown (host clock).
+
+    ``prefill_ms`` / ``decode_ms`` cover the jitted calls (all prefill
+    sub-batches of the step, resp. the one decode batch);
+    ``schedule_ms`` is the scheduler's host time.  The serving
+    calibrator regresses these against the step's token composition."""
+
+    step: int
+    schedule_ms: float
+    prefill_ms: float
+    decode_ms: float
+    n_prefill_seqs: int
+    prefill_tokens: int  # tokens prefilled this step (recompute included)
+    n_decode_seqs: int
 
 
 @dataclasses.dataclass
@@ -74,6 +92,16 @@ class EngineReport:
     occupancy_mean: float  # KV-pool block occupancy, sampled per step
     occupancy_max: float
     budget_util_mean: float  # budget_used / token_budget per step
+    # Phase-level wall-time breakdown (sums over steps; the per-step
+    # rows live in ``Engine.step_timings``).  prefill_ms_mean /
+    # decode_ms_mean average over the steps that RAN that phase.
+    schedule_s_total: float = 0.0
+    prefill_s_total: float = 0.0
+    decode_s_total: float = 0.0
+    prefill_steps: int = 0  # steps with at least one prefill sub-batch
+    decode_steps: int = 0  # steps with a decode batch
+    prefill_ms_mean: float = 0.0
+    decode_ms_mean: float = 0.0
 
     def summary(self) -> str:
         return (
@@ -88,7 +116,11 @@ class EngineReport:
             f"{self.ttft_steps_p95:.1f} p95 ({self.ttft_s_mean * 1e3:.1f} ms); "
             f"ITL {self.itl_steps_mean:.2f} steps\n"
             f"pool     occupancy {self.occupancy_mean:.1%} mean / "
-            f"{self.occupancy_max:.1%} max; budget {self.budget_util_mean:.1%}"
+            f"{self.occupancy_max:.1%} max; budget {self.budget_util_mean:.1%}\n"
+            f"phases   prefill {self.prefill_s_total * 1e3:.1f} ms over "
+            f"{self.prefill_steps} steps ({self.prefill_ms_mean:.2f} ms/step); "
+            f"decode {self.decode_s_total * 1e3:.1f} ms over "
+            f"{self.decode_steps} steps ({self.decode_ms_mean:.2f} ms/step)"
         )
 
 
@@ -100,7 +132,8 @@ def build_report(requests: Sequence[Request], *, n_steps: int, wall_s: float,
                  token_slots: int, prompt_tokens: int, recompute_tokens: int,
                  generated_tokens: int,
                  occupancy_samples: Sequence[float],
-                 budget_fracs: Sequence[float]) -> EngineReport:
+                 budget_fracs: Sequence[float],
+                 step_timings: Sequence[StepTiming] = ()) -> EngineReport:
     finished = [r for r in requests if r.state is RequestState.FINISHED]
     ttft_steps = [r.first_token_step - r.arrival_step for r in finished
                   if r.first_token_step is not None]
@@ -112,6 +145,8 @@ def build_report(requests: Sequence[Request], *, n_steps: int, wall_s: float,
     # Recomputed context is real compute but NOT useful output -- it is
     # preemption overhead and must not inflate slot_efficiency.
     useful = prompt_tokens + generated_tokens
+    pf = [t for t in step_timings if t.n_prefill_seqs]
+    dc = [t for t in step_timings if t.n_decode_seqs]
     return EngineReport(
         n_requests=len(requests),
         n_finished=len(finished),
@@ -131,6 +166,13 @@ def build_report(requests: Sequence[Request], *, n_steps: int, wall_s: float,
         occupancy_mean=float(np.mean(occupancy_samples)) if len(occupancy_samples) else 0.0,
         occupancy_max=float(np.max(occupancy_samples)) if len(occupancy_samples) else 0.0,
         budget_util_mean=float(np.mean(budget_fracs)) if len(budget_fracs) else 0.0,
+        schedule_s_total=sum(t.schedule_ms for t in step_timings) * 1e-3,
+        prefill_s_total=sum(t.prefill_ms for t in step_timings) * 1e-3,
+        decode_s_total=sum(t.decode_ms for t in step_timings) * 1e-3,
+        prefill_steps=len(pf),
+        decode_steps=len(dc),
+        prefill_ms_mean=float(np.mean([t.prefill_ms for t in pf])) if pf else 0.0,
+        decode_ms_mean=float(np.mean([t.decode_ms for t in dc])) if dc else 0.0,
     )
 
 
@@ -183,11 +225,18 @@ class Engine:
         )
         self._key = rng_key  # None = deterministic (greedy) path
         self._rng_calls = 0  # folded into the key once per jitted call
+        # Shapes this replica has already run through the jitted steps:
+        # the FIRST call per shape includes XLA compilation (seconds vs
+        # milliseconds steady-state) and must not be fed to the serving
+        # calibrator as a timing sample.
+        self._warm_prefill_shapes: set[tuple[int, int]] = set()
+        self._warm_decode_shapes: set[int] = set()
 
         self.waiting: list[SequenceState] = []
         self.running: list[SequenceState] = []
         self.requests: list[Request] = []
         self.plans: list[StepPlan] = []
+        self.step_timings: list[StepTiming] = []
         self.n_steps = 0
         self.token_slots = 0
         self.prompt_tokens = 0
@@ -230,10 +279,22 @@ class Engine:
         step = self.n_steps
         plan = self.scheduler.schedule(step, self.waiting, self.running,
                                        self.pool, seq_slots=self.seq_slots)
+        t1 = time.perf_counter()
+        prefill_tokens = 0
         if plan.prefill:
-            self._run_prefill(plan.prefill, step)
+            prefill_tokens = self._run_prefill(plan.prefill, step)
+        t2 = time.perf_counter()
         if plan.decode:
             self._run_decode(plan.decode, step)
+        t3 = time.perf_counter()
+        self.step_timings.append(StepTiming(
+            step=step,
+            schedule_ms=(t1 - t0) * 1e3,
+            prefill_ms=(t2 - t1) * 1e3,
+            decode_ms=(t3 - t2) * 1e3,
+            n_prefill_seqs=len(plan.prefill),
+            prefill_tokens=prefill_tokens,
+            n_decode_seqs=len(plan.decode)))
         self.n_steps += 1
         self.plans.append(plan)
         self.occupancy_samples.append(self.pool.occupancy)
@@ -280,8 +341,10 @@ class Engine:
         return jax.random.fold_in(
             jax.random.fold_in(self._key, self.replica_id), self._rng_calls)
 
-    def _run_prefill(self, seqs: list[SequenceState], step: int) -> None:
+    def _run_prefill(self, seqs: list[SequenceState], step: int) -> int:
         ecfg = self.engine_cfg
+        observe = getattr(self.scheduler.cost_model, "observe_prefill", None)
+        total_tokens = 0
         prompts = [s.request.full_prompt() for s in seqs]
         for group in self._prefill_groups(seqs, prompts):
             B = len(group)
@@ -292,12 +355,29 @@ class Engine:
                 batch[row, : prompts[i].size] = prompts[i]
             bt = self.pool.table_array([seqs[i].seq_id for i in group],
                                        self.table_width)
+            tg = time.perf_counter()
             first, _, cache = self._prefill(
                 self.params, jnp.asarray(batch), jnp.asarray(lens),
                 self.pool.cache, jnp.asarray(bt), self._next_key())
             self.pool.cache = cache
             first = np.asarray(first)
             now = time.perf_counter()
+            total_tokens += int(lens.sum())
+            warm = (B, Tp) in self._warm_prefill_shapes
+            self._warm_prefill_shapes.add((B, Tp))
+            if observe is not None and warm:
+                # Feed the serving calibrator this sub-batch's token
+                # composition (generated-so-far recompute tokens count
+                # as text, matching Scheduler.request_cost).  Cold
+                # shapes are skipped: their wall time is XLA compile.
+                counts: dict[str, int] = {"text": 0}
+                for i in group:
+                    req = seqs[i].request
+                    for m, n in req.modality_tokens.items():
+                        counts[m] = counts.get(m, 0) + int(n)
+                    counts["text"] += int(prompts[i].size
+                                          - sum(req.modality_tokens.values()))
+                observe(counts, (now - tg) * 1e3, step=step)
             for row, i in enumerate(group):
                 # A recompute (post-preemption) re-prefills its whole
                 # context; only a first admission counts as useful
@@ -309,6 +389,7 @@ class Engine:
                 seqs[i].t = int(lens[row])
                 self._deliver(seqs[i], int(first[row, 0]), step, now)
             self.token_slots += B * Tp
+        return total_tokens
 
     def _run_decode(self, seqs: list[SequenceState], step: int) -> None:
         ecfg = self.engine_cfg
@@ -322,12 +403,21 @@ class Engine:
         if B > len(seqs):
             bt = np.concatenate(
                 [bt, np.zeros((B - len(seqs), self.table_width), np.int32)])
+        tg = time.perf_counter()
         nxt, _, cache = self._decode(
             self.params, jnp.asarray(tokens), self.pool.cache,
             jnp.asarray(bt), jnp.asarray(t_vec), self._next_key())
         self.pool.cache = cache
         nxt = np.asarray(nxt)
         now = time.perf_counter()
+        warm = B in self._warm_decode_shapes
+        self._warm_decode_shapes.add(B)
+        observe = getattr(self.scheduler.cost_model, "observe_decode", None)
+        if observe is not None and warm:  # cold shape = XLA compile time
+            # Regress on the PADDED row count: that is what the jitted
+            # call computed, so the fitted per-row cost is fill-level
+            # unbiased (an active seq occupies ~1 padded row).
+            observe(B, (now - tg) * 1e3, step=step)
         for i, seq in enumerate(seqs):
             seq.t += 1
             self._deliver(seq, int(nxt[i, 0]), step, now)
@@ -365,7 +455,8 @@ class Engine:
             recompute_tokens=self.recompute_tokens,
             generated_tokens=self.generated_tokens,
             occupancy_samples=self.occupancy_samples,
-            budget_fracs=self.budget_fracs)
+            budget_fracs=self.budget_fracs,
+            step_timings=self.step_timings)
 
 
 class MultiReplicaEngine:
@@ -442,4 +533,5 @@ class MultiReplicaEngine:
             prompt_tokens=sum(e.prompt_tokens for e in self.engines),
             recompute_tokens=sum(e.recompute_tokens for e in self.engines),
             generated_tokens=sum(e.generated_tokens for e in self.engines),
-            occupancy_samples=occ, budget_fracs=frac)
+            occupancy_samples=occ, budget_fracs=frac,
+            step_timings=[t for e in self.engines for t in e.step_timings])

@@ -32,36 +32,13 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.configs.base import EngineConfig, ModelConfig
+from repro.configs.base import EngineConfig
 from repro.core.balancing import post_balance
-from repro.core.cost_model import CostModel, ServingCostModel, transformer_cost_coeffs
+from repro.core.cost_model import ServingCostModel, serving_cost_model
 from repro.serving.engine.kv_pool import PagedKVPool
 from repro.serving.engine.request import Request, RequestState, SequenceState
 
 __all__ = ["StepPlan", "Scheduler", "serving_cost_model", "assign_replicas"]
-
-
-def serving_cost_model(cfg: ModelConfig) -> ServingCostModel:
-    """Derive the serving admission costs from an architecture.
-
-    alpha/beta come from :func:`transformer_cost_coeffs` (so the
-    quadratic attention term prices long prompts super-linearly, as in
-    training).  Each encoder's modality weight is the encoder+connector
-    compute riding on one post-connector LLM token, relative to a
-    backbone token: ``1 + (enc_layers * enc_width^2 * downsample) /
-    (layers * width^2)`` -- ``downsample`` because each LLM token
-    aggregates that many encoder tokens."""
-    alpha, beta = transformer_cost_coeffs(
-        cfg.d_model, cfg.d_ff, max(1, cfg.n_layers),
-        moe_experts_active=max(1, cfg.experts_per_token),
-        ssm=cfg.family == "ssm")
-    base = max(1, cfg.n_layers) * cfg.d_model ** 2
-    weights = {
-        e.name: 1.0 + (e.n_layers * e.d_model ** 2 * e.downsample) / base
-        for e in cfg.encoders
-    }
-    return ServingCostModel(CostModel(alpha=alpha, beta=beta),
-                            modality_weights=weights)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,32 @@
+"""Telemetry & online cost-model calibration (ISSUE 4).
+
+Closes the loop from measured per-phase step times back into the f(S)
+that every balancing decision optimizes:
+
+    trace.py      PhaseSample ring buffer + Chrome-trace/Perfetto export
+    calibrate.py  regularized NNLS / RLS coefficient fitting, confidence
+                  intervals, CUSUM drift detection
+    adaptive.py   AdaptiveCostModel / AdaptiveOrchestration /
+                  AdaptiveServingCostModel -- analytic prior until the
+                  fit is confident, calibrated coefficients after
+"""
+from repro.telemetry.adaptive import (
+    AdaptiveCostModel,
+    AdaptiveOrchestration,
+    AdaptiveServingCostModel,
+)
+from repro.telemetry.calibrate import (
+    CoeffEstimate,
+    DriftDetector,
+    PhaseCalibrator,
+    RecursiveFit,
+    ServingCalibrator,
+    nnls_fit,
+)
+from repro.telemetry.trace import PhaseSample, TraceBuffer
+
+__all__ = [
+    "AdaptiveCostModel", "AdaptiveOrchestration", "AdaptiveServingCostModel",
+    "CoeffEstimate", "DriftDetector", "PhaseCalibrator", "PhaseSample",
+    "RecursiveFit", "ServingCalibrator", "TraceBuffer", "nnls_fit",
+]

@@ -1,0 +1,527 @@
+"""Online cost-model calibration: fit f(S) coefficients from traces.
+
+Design note.  The balancing objective only ever consumes *ratios* of
+costs (utilization = mean/max, argmin over rearrangements), so fitting
+wall-clock milliseconds directly onto the feature basis
+
+    t_phase(S) ~ alpha * x0(S) + beta * x_quad(S)
+
+gives coefficients that are immediately usable as a
+:class:`~repro.core.cost_model.CostModel` -- no unit conversion.  Both
+coefficients are physically nonnegative, which is exactly what makes a
+mis-fit dangerous if unconstrained least squares were used (a noisy
+window can produce beta < 0 and *invert* the balancing preference for
+long sequences); hence every solve here is a **regularized NNLS**:
+
+    min_{c >= 0}  ||X c - y||^2 + ridge * ||c - c_prior||^2
+
+with the analytic ``transformer_cost_coeffs`` prior as the regularizer
+target, so one noisy sample cannot yank the model and zero samples
+reproduce the prior exactly.  :class:`RecursiveFit` is the O(d^2)
+sliding-memory variant (projected recursive least squares with
+exponential forgetting) for consumers that cannot afford the window
+refit.
+
+Drift.  Workload regime changes (a resolution bump, a new trace mix, a
+different accelerator) shift the true coefficients; a fit over a window
+straddling the change is wrong for *both* regimes.
+:class:`DriftDetector` runs a two-sided CUSUM over standardized
+relative residuals of the *current* estimate: it stays quiet under
+stationary noise (the slack ``k`` absorbs it) but accumulates once the
+mean residual shifts, and fires a drift event that tells the calibrator
+to flush its pre-change window and re-converge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import CostModel, N_FEATURES
+
+try:  # scipy's Lawson-Hanson NNLS when available (CI installs it)
+    from scipy.optimize import nnls as _scipy_nnls
+except Exception:  # pragma: no cover - exercised in bare containers
+    _scipy_nnls = None
+
+__all__ = [
+    "CoeffEstimate",
+    "DriftDetector",
+    "PhaseCalibrator",
+    "RecursiveFit",
+    "ServingCalibrator",
+    "nnls_fit",
+]
+
+
+# ---------------------------------------------------------------------------
+# NNLS core
+
+
+def _nnls_active_set(A: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Exact small-dimension NNLS by active-set enumeration.
+
+    The calibrator fits 2-4 coefficients, so enumerating all 2^k
+    support sets and keeping the best feasible least-squares solution is
+    exact and allocation-free -- the fallback when scipy is absent."""
+    k = A.shape[1]
+    best = np.zeros(k)
+    best_rss = float(b @ b)
+    for mask in range(1, 1 << k):
+        cols = [j for j in range(k) if mask >> j & 1]
+        sol, *_ = np.linalg.lstsq(A[:, cols], b, rcond=None)
+        if (sol < 0).any():
+            continue
+        r = b - A[:, cols] @ sol
+        rss = float(r @ r)
+        if rss < best_rss - 1e-12 * max(1.0, best_rss):
+            best_rss = rss
+            best = np.zeros(k)
+            best[cols] = sol
+    return best
+
+
+def nnls_fit(X: np.ndarray, y: np.ndarray, *, ridge: float = 0.0,
+             prior: Sequence[float] | None = None) -> np.ndarray:
+    """Regularized nonnegative least squares.
+
+    Solves ``min_{c>=0} ||Xc - y||^2 + ridge*||c - prior||^2`` by row
+    augmentation.  Columns are rescaled to unit RMS internally (the
+    quadratic features dwarf the linear ones by orders of magnitude) so
+    the solve is well conditioned; coefficients come back in the
+    original units."""
+    X = np.asarray(X, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64).reshape(-1)
+    if X.ndim != 2 or X.shape[0] != y.size:
+        raise ValueError(f"shape mismatch: X {X.shape} vs y {y.shape}")
+    n, k = X.shape
+    prior_v = (np.zeros(k) if prior is None
+               else np.asarray(prior, dtype=np.float64).reshape(k))
+    if (prior_v < 0).any():
+        raise ValueError("prior must be nonnegative")
+    if n == 0:
+        return prior_v.copy()
+    scale = np.sqrt(np.mean(X * X, axis=0))
+    scale[scale == 0] = 1.0
+    Xs = X / scale
+    A, b = Xs, y
+    if ridge > 0:
+        A = np.vstack([Xs, math.sqrt(ridge) * np.eye(k)])
+        b = np.concatenate([y, math.sqrt(ridge) * prior_v * scale])
+    if _scipy_nnls is not None:
+        c, _ = _scipy_nnls(A, b)
+    else:
+        c = _nnls_active_set(A, b)
+    return c / scale
+
+
+@dataclasses.dataclass(frozen=True)
+class CoeffEstimate:
+    """A fitted (alpha, beta) with its uncertainty.
+
+    Standard errors come from the Gaussian approximation at the NNLS
+    solution (sigma^2 * (X'X + ridge I)^-1).  ``alpha_rel`` /
+    ``beta_rel`` measure each coefficient's uncertainty by its *impact*:
+    the share of the window's typical predicted cost that one standard
+    error of the coefficient moves.  This is what makes a genuinely
+    linear phase (true beta = 0, e.g. SSM) calibratable: beta pinned at
+    the NNLS boundary has negligible cost impact even though its
+    coefficient-relative error is undefined."""
+
+    alpha: float
+    beta: float
+    alpha_se: float
+    beta_se: float
+    n: int
+    sigma: float  # residual std in wall-ms units
+    quad_index: int
+    alpha_rel: float = np.inf  # alpha_se * typ(x0) / typ(predicted cost)
+    beta_rel: float = np.inf  # beta_se * typ(xq) / typ(predicted cost)
+
+    def max_rel_se(self) -> float:
+        return max(self.alpha_rel, self.beta_rel)
+
+    def confident(self, rel_tol: float) -> bool:
+        return self.n >= 2 and self.max_rel_se() <= rel_tol
+
+
+def fit_phase_coeffs(X: np.ndarray, y: np.ndarray, *, quad_index: int,
+                     ridge: float = 1e-3,
+                     prior: tuple[float, float] = (1.0, 0.0)) -> CoeffEstimate:
+    """Fit (alpha, beta) of one phase from (n, 4) features + wall times."""
+    X = np.asarray(X, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64).reshape(-1)
+    cols = X[:, [0, quad_index]]
+    c = nnls_fit(cols, y, ridge=ridge, prior=prior)
+    n, k = cols.shape
+    resid = y - cols @ c
+    dof = max(n - k, 1)
+    sigma2 = float(resid @ resid) / dof
+    scale = np.sqrt(np.mean(cols * cols, axis=0))
+    scale[scale == 0] = 1.0
+    G = (cols / scale).T @ (cols / scale) + ridge * np.eye(k)
+    try:
+        cov_s = sigma2 * np.linalg.inv(G)
+        se = np.sqrt(np.maximum(np.diag(cov_s), 0.0)) / scale
+    except np.linalg.LinAlgError:  # pragma: no cover
+        se = np.full(k, np.inf)
+    typical_cost = max(float(c @ scale), 1e-30)  # cost at the RMS batch
+    rel = se * scale / typical_cost
+    return CoeffEstimate(alpha=float(c[0]), beta=float(c[1]),
+                         alpha_se=float(se[0]), beta_se=float(se[1]),
+                         n=n, sigma=math.sqrt(sigma2), quad_index=quad_index,
+                         alpha_rel=float(rel[0]), beta_rel=float(rel[1]))
+
+
+# ---------------------------------------------------------------------------
+# Recursive least squares (online variant)
+
+
+class RecursiveFit:
+    """Projected recursive least squares with exponential forgetting.
+
+    O(d^2) per sample, no window storage: ``theta`` tracks the
+    regularized LS solution and is projected onto the nonnegative
+    orthant after every update (projected-RLS; for this well-posed
+    2-4 dim problem the projection is the NNLS clip).  ``forget < 1``
+    discounts old samples geometrically, giving the online fit a
+    built-in drift response with time constant ``1/(1-forget)``."""
+
+    def __init__(self, n_features: int = 2, *,
+                 prior: Sequence[float] | None = None,
+                 ridge: float = 1e-3, forget: float = 1.0) -> None:
+        if not 0.0 < forget <= 1.0:
+            raise ValueError("forget must be in (0, 1]")
+        self.k = n_features
+        self.theta = (np.zeros(n_features) if prior is None
+                      else np.asarray(prior, dtype=np.float64).copy())
+        self.P = np.eye(n_features) / max(ridge, 1e-12)
+        self.forget = forget
+        self.n = 0
+        self._scale: np.ndarray | None = None
+
+    def update(self, x: Sequence[float], y: float) -> float:
+        """Consume one sample; returns the pre-update relative residual."""
+        x = np.asarray(x, dtype=np.float64).reshape(self.k)
+        if self._scale is None:
+            s = np.abs(x)
+            s[s == 0] = 1.0
+            self._scale = s  # first-sample column scaling (conditioning)
+        xs = x / self._scale
+        pred = float(x @ self.theta)
+        resid = (y - pred) / max(abs(pred), 1e-12)
+        th_s = self.theta * self._scale
+        Px = self.P @ xs
+        denom = self.forget + float(xs @ Px)
+        gain = Px / denom
+        th_s = th_s + gain * (y - float(xs @ th_s))
+        self.P = (self.P - np.outer(gain, Px)) / self.forget
+        self.theta = np.maximum(th_s / self._scale, 0.0)
+        self.n += 1
+        return resid
+
+    @property
+    def coeffs(self) -> np.ndarray:
+        return self.theta.copy()
+
+
+# ---------------------------------------------------------------------------
+# Drift detection
+
+
+class DriftDetector:
+    """Two-sided CUSUM over standardized relative residuals.
+
+    ``warmup`` residuals establish the reference (mu0, sigma0); after
+    that each residual's z-score feeds the classic tabular CUSUM
+
+        S+ = max(0, S+ + z - k)      S- = max(0, S- - z - k)
+
+    and a drift fires when either side exceeds ``h``.  With the default
+    slack ``k = 0.75`` sigma and threshold ``h = 12`` sigma, stationary
+    Gaussian noise has a vanishing false-alarm rate over thousands of
+    samples, while a one-sigma mean shift is flagged in ~tens of
+    samples.  After firing, the detector re-warms on the new regime."""
+
+    def __init__(self, *, k: float = 0.75, h: float = 12.0,
+                 warmup: int = 20, min_scale: float = 1e-4) -> None:
+        self.k = k
+        self.h = h
+        self.warmup = warmup
+        self.min_scale = min_scale
+        self.events = 0
+        self._reset()
+
+    def _reset(self) -> None:
+        self._ref: deque[float] = deque(maxlen=self.warmup)
+        self._mu = 0.0
+        self._sigma = 0.0
+        self._armed = False
+        self.s_pos = 0.0
+        self.s_neg = 0.0
+
+    def update(self, residual: float) -> bool:
+        """Feed one relative residual; True when a drift event fires."""
+        if not self._armed:
+            self._ref.append(float(residual))
+            if len(self._ref) == self.warmup:
+                ref = np.asarray(self._ref)
+                self._mu = float(ref.mean())
+                self._sigma = max(float(ref.std()), self.min_scale)
+                self._armed = True
+            return False
+        z = (float(residual) - self._mu) / self._sigma
+        self.s_pos = max(0.0, self.s_pos + z - self.k)
+        self.s_neg = max(0.0, self.s_neg - z - self.k)
+        if self.s_pos > self.h or self.s_neg > self.h:
+            self.events += 1
+            self._reset()
+            return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Per-phase calibration
+
+
+class PhaseCalibrator:
+    """Sliding-window regularized-NNLS calibration of one phase's f(S).
+
+    ``observe`` consumes (features, wall_ms) rows; every ``refit_every``
+    rows the window is refit and the estimate refreshed.  Residuals are
+    only fed to the drift detector once the estimate is confident (the
+    prior being 3x off is *mis-calibration*, which the fit repairs --
+    not drift).  On drift the pre-change window is flushed down to the
+    most recent ``drift_keep`` rows (they already belong to the new
+    regime: CUSUM fires with a short delay) and the estimate is marked
+    stale until the fit re-converges."""
+
+    def __init__(self, prior: CostModel, *, window: int = 256,
+                 min_samples: int = 12, refit_every: int = 4,
+                 ridge: float = 1e-3, rel_tol: float = 0.25,
+                 drift_keep: int = 16,
+                 detector: DriftDetector | None = None) -> None:
+        self.prior = prior
+        self.window = window
+        self.min_samples = min_samples
+        self.refit_every = refit_every
+        self.ridge = ridge
+        self.rel_tol = rel_tol
+        self.drift_keep = drift_keep
+        self.detector = detector or DriftDetector()
+        self._X: deque[np.ndarray] = deque(maxlen=window)
+        self._y: deque[float] = deque(maxlen=window)
+        self._since_refit = 0
+        self._estimate: CoeffEstimate | None = None
+        self._confident: CoeffEstimate | None = None  # last CONFIDENT fit
+        self._stale = False
+        self.n_observed = 0
+        self.drift_events = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def estimate(self) -> CoeffEstimate | None:
+        return self._estimate
+
+    @property
+    def calibrated(self) -> bool:
+        """A confident fit exists and predates no drift."""
+        return self._confident is not None and not self._stale
+
+    def cost_model(self) -> CostModel:
+        """Current best f(S): the last CONFIDENT fit once one exists
+        (kept while re-converging after drift -- an unconfident
+        post-drift refit is never served), the analytic prior before
+        that."""
+        if self._confident is not None:
+            return self.prior.with_coeffs(self._confident.alpha,
+                                          self._confident.beta)
+        return self.prior
+
+    # ------------------------------------------------------------------
+    def observe(self, features: np.ndarray, wall_ms) -> bool:
+        """Add sample rows; returns True if a drift event fired."""
+        F = np.asarray(features, dtype=np.float64)
+        if F.ndim == 1:
+            F = F[None, :]
+        w = np.atleast_1d(np.asarray(wall_ms, dtype=np.float64))
+        if F.shape[0] != w.size or F.shape[1] != N_FEATURES:
+            raise ValueError(f"features {F.shape} vs wall_ms {w.shape}")
+        drifted = False
+        cm = self.cost_model()
+        feed_detector = self.calibrated  # never learn a reference off the
+        for row, t in zip(F, w):         # (possibly 3x-off) analytic prior
+            if feed_detector:
+                pred = float(cm.cost_from_features(row))
+                resid = (t - pred) / max(abs(pred), 1e-12)
+                if self.detector.update(resid):
+                    drifted = True
+            self._X.append(row)
+            self._y.append(float(t))
+            self.n_observed += 1
+            self._since_refit += 1
+        if drifted:
+            self._on_drift()
+        elif (self._since_refit >= self.refit_every
+                and len(self._y) >= min(self.min_samples, self.window)):
+            self._refit()
+        return drifted
+
+    def _on_drift(self) -> None:
+        self.drift_events += 1
+        keep = min(self.drift_keep, len(self._y))
+        X = list(self._X)[-keep:]
+        y = list(self._y)[-keep:]
+        self._X.clear()
+        self._y.clear()
+        self._X.extend(X)
+        self._y.extend(y)
+        self._stale = True
+        self._since_refit = 0
+
+    def _refit(self) -> None:
+        X = np.stack(self._X)
+        y = np.asarray(self._y)
+        est = fit_phase_coeffs(
+            X, y, quad_index=self.prior.quad_index, ridge=self.ridge,
+            prior=(self.prior.alpha, self.prior.beta))
+        self._estimate = est
+        self._since_refit = 0
+        if est.n >= self.min_samples and est.confident(self.rel_tol):
+            self._confident = est
+            self._stale = False
+
+
+# ---------------------------------------------------------------------------
+# Serving-side calibration (modality weights + decode cost)
+
+
+class ServingCalibrator:
+    """Fit per-modality serving weights and the decode/prefill ratio.
+
+    Prefill model: one prefill batch's wall time is linear in its token
+    composition, ``t ~ c_text*n_text + sum_m c_m*n_m`` (NNLS over the
+    fixed modality column order), so the calibrated modality weight is
+    ``c_m / c_text`` -- the measured per-token compute of a modality-m
+    LLM token relative to a text token, exactly what
+    :class:`~repro.core.cost_model.ServingCostModel` consumes.
+
+    Decode model: ``t ~ c_dec * batch`` (slope through the origin), and
+    the calibrated ``decode_cost`` is ``c_dec / c_text`` -- pricing one
+    decoded token against one prefilled text token in the scheduler's
+    shared admission budget."""
+
+    def __init__(self, modalities: Sequence[str], *, window: int = 256,
+                 min_samples: int = 8, refit_every: int = 4,
+                 ridge: float = 1e-3, rel_tol: float = 0.35,
+                 detector: DriftDetector | None = None) -> None:
+        self.modalities = tuple(modalities)
+        self.window = window
+        self.min_samples = min_samples
+        self.refit_every = refit_every
+        self.ridge = ridge
+        self.rel_tol = rel_tol
+        self.detector = detector or DriftDetector()
+        self._rows: deque[np.ndarray] = deque(maxlen=window)
+        self._t: deque[float] = deque(maxlen=window)
+        self._since_refit = 0
+        self._dec: deque[tuple[float, float]] = deque(maxlen=window)
+        self._coeffs: np.ndarray | None = None  # [c_text, c_m...]
+        self._coeffs_se: np.ndarray | None = None
+        self._dec_cost: float | None = None
+        self.drift_events = 0
+
+    # ------------------------------------------------------------------
+    def observe_prefill(self, token_counts: Mapping[str, int],
+                        wall_ms: float) -> bool:
+        """One prefill sub-batch: its total token composition + time."""
+        row = np.array(
+            [float(token_counts.get("text", 0))]
+            + [float(token_counts.get(m, 0)) for m in self.modalities])
+        drifted = False
+        if self._coeffs is not None:
+            pred = float(row @ self._coeffs)
+            resid = (wall_ms - pred) / max(abs(pred), 1e-12)
+            if self.detector.update(resid):
+                drifted = True
+                self.drift_events += 1
+                self._rows.clear()
+                self._t.clear()
+                self._coeffs = None
+                # Pre-drift decode timings are the old regime too.
+                self._dec.clear()
+                self._dec_cost = None
+        self._rows.append(row)
+        self._t.append(float(wall_ms))
+        self._since_refit += 1
+        # Refit on the hot serving path only every refit_every samples
+        # (plus immediately at min_samples and after a drift flush).
+        if len(self._t) >= self.min_samples and (
+                self._since_refit >= self.refit_every
+                or self._coeffs is None):
+            self._refit()
+            self._since_refit = 0
+        return drifted
+
+    def observe_decode(self, batch: int, wall_ms: float) -> None:
+        self._dec.append((float(batch), float(wall_ms)))
+        b = np.array([x for x, _ in self._dec])
+        t = np.array([x for _, x in self._dec])
+        denom = float(b @ b)
+        if denom > 0:
+            self._dec_cost = float(b @ t) / denom
+
+    def _refit(self) -> None:
+        X = np.stack(self._rows)
+        y = np.asarray(self._t)
+        used = X.any(axis=0)  # modalities never seen stay at prior weight
+        c = np.zeros(X.shape[1])
+        c[used] = nnls_fit(X[:, used], y, ridge=self.ridge,
+                           prior=np.zeros(int(used.sum())))
+        self._coeffs = c
+        resid = y - X @ c
+        dof = max(y.size - int(used.sum()), 1)
+        sigma2 = float(resid @ resid) / dof
+        se = np.full(X.shape[1], np.inf)
+        scale = np.sqrt(np.mean(X[:, used] ** 2, axis=0))
+        scale[scale == 0] = 1.0
+        G = (X[:, used] / scale).T @ (X[:, used] / scale) \
+            + self.ridge * np.eye(int(used.sum()))
+        try:
+            se[used] = np.sqrt(np.maximum(
+                np.diag(sigma2 * np.linalg.inv(G)), 0.0)) / scale
+        except np.linalg.LinAlgError:  # pragma: no cover
+            pass
+        self._coeffs_se = se
+
+    # ------------------------------------------------------------------
+    @property
+    def calibrated(self) -> bool:
+        if self._coeffs is None or self._coeffs[0] <= 0:
+            return False
+        rel = self._coeffs_se[0] / self._coeffs[0]
+        return len(self._t) >= self.min_samples and rel <= self.rel_tol
+
+    def weights(self) -> dict[str, float] | None:
+        """Calibrated modality weights (None until confident); modality
+        columns with no observations are omitted (prior weight kept)."""
+        if not self.calibrated:
+            return None
+        c_text = self._coeffs[0]
+        out = {}
+        for i, m in enumerate(self.modalities):
+            c = self._coeffs[1 + i]
+            if np.isfinite(self._coeffs_se[1 + i]):
+                out[m] = float(c / c_text)
+        return out
+
+    def decode_cost(self) -> float | None:
+        """Calibrated decode cost in prefill-text-token units."""
+        if not self.calibrated or self._dec_cost is None:
+            return None
+        if len(self._dec) < self.min_samples:
+            return None
+        return float(self._dec_cost / self._coeffs[0])

@@ -288,3 +288,64 @@ def test_engine_stochastic_sampling_reproducible():
         return [r.output_tokens for r in reqs]
 
     assert run(jax.random.PRNGKey(7)) == run(jax.random.PRNGKey(7))
+
+
+def test_engine_report_phase_time_breakdown():
+    """ISSUE 4 satellite: EngineReport carries the per-step
+    prefill/decode wall-time breakdown (and Engine.step_timings the
+    per-step rows)."""
+    cfg = _smoke("olmo_1b")
+    params = _params(cfg)
+    ecfg = EngineConfig(block_size=16, num_blocks=33, max_num_seqs=4,
+                        token_budget=96, max_model_len=64,
+                        prefill_pad=16, decode_pad=2)
+    rng = np.random.default_rng(6)
+    reqs = _trace(cfg, rng, 6)
+    engine = Engine(cfg, ecfg, params)
+    report = engine.run(reqs, max_steps=300)
+    assert len(engine.step_timings) == engine.n_steps
+    assert report.prefill_steps == sum(
+        1 for t in engine.step_timings if t.n_prefill_seqs)
+    assert report.decode_steps == sum(
+        1 for t in engine.step_timings if t.n_decode_seqs)
+    assert report.prefill_steps > 0 and report.decode_steps > 0
+    assert report.prefill_s_total > 0 and report.decode_s_total > 0
+    assert report.prefill_ms_mean > 0 and report.decode_ms_mean > 0
+    # Totals agree with the per-step rows; phase time fits in the wall.
+    assert report.prefill_s_total == pytest.approx(
+        sum(t.prefill_ms for t in engine.step_timings) * 1e-3)
+    assert (report.schedule_s_total + report.prefill_s_total
+            + report.decode_s_total) <= report.wall_s + 1e-6
+    # Prefilled tokens ledger matches the prompt+recompute accounting.
+    assert sum(t.prefill_tokens for t in engine.step_timings) == (
+        report.prompt_tokens + report.recompute_tokens)
+    assert "phases" in report.summary()
+
+
+def test_engine_feeds_adaptive_serving_cost_model():
+    """The engine streams prefill compositions / decode batch sizes into
+    an AdaptiveServingCostModel, and admission math stays on the prior
+    until the fit is confident."""
+    from repro.core.cost_model import serving_cost_model
+    from repro.telemetry import AdaptiveServingCostModel
+
+    cfg = _smoke("olmo_1b")
+    params = _params(cfg)
+    ecfg = EngineConfig(block_size=16, num_blocks=33, max_num_seqs=4,
+                        token_budget=96, max_model_len=64,
+                        prefill_pad=16, decode_pad=2)
+    adaptive = AdaptiveServingCostModel(serving_cost_model(cfg))
+    rng = np.random.default_rng(7)
+    reqs = _trace(cfg, rng, 6)
+    engine = Engine(cfg, ecfg, params, cost_model=adaptive)
+    engine.run(reqs, max_steps=300)
+    cal = adaptive.calibrator
+    assert len(cal._t) > 0, "no prefill observations reached the calibrator"
+    assert len(cal._dec) > 0, "no decode observations reached the calibrator"
+    # Text-only trace: no modality columns, weights stay on the prior.
+    assert adaptive.modality_weights == adaptive.prior.modality_weights
+    # Greedy streams are untouched by the adaptive wrapper.
+    ref = Engine(cfg, ecfg, params)
+    ref.run(_trace(cfg, np.random.default_rng(7), 6), max_steps=300)
+    assert ([r.output_tokens for r in engine.requests]
+            == [r.output_tokens for r in ref.requests])
