@@ -1,0 +1,196 @@
+"""Benchmark regression gate: diff fresh smoke results against committed
+baselines.
+
+The committed ``BENCH_*.json`` artifacts record full-scale headline
+metrics, but full runs are too slow (and too noisy) for a per-PR lane.
+This gate instead compares a fresh ``--smoke --check`` run of every
+benchmark against ``BENCH_baseline_smoke.json`` -- a committed snapshot
+of the *smoke* headline metrics -- with a per-metric tolerance band, so
+a PR that silently halves the dispatcher speedup or the serving
+throughput ratio fails CI instead of only updating an artifact.
+
+Metrics and their bands:
+
+  dispatch     headline.aggregate_speedup      wall-time ratio (noisy on
+                                               shared runners): generous
+                                               relative band + abs floor
+  attention    mean/min skip_fraction          deterministic tile counts:
+                                               tight band
+  serving      slot_throughput_speedup         deterministic slot counts:
+                                               tight band; streams_match
+                                               must hold
+  calibration  recovered_fraction              seeded simulation: medium
+                                               band; within_5pct flag
+                                               must hold
+
+Usage:
+    python -m benchmarks.check_regression --fresh-dir /tmp
+    python -m benchmarks.check_regression --fresh-dir /tmp --update
+
+``--update`` rewrites the committed baseline from the fresh results
+(run it when a PR *intentionally* moves a headline metric).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Any, Callable
+
+BASELINE = "BENCH_baseline_smoke.json"
+
+
+def _mean(xs):
+    xs = list(xs)
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """One gated headline metric (higher is better)."""
+
+    bench: str  # fresh results file stem, e.g. "BENCH_serving"
+    name: str
+    extract: Callable[[dict], float]
+    rel_tol: float  # fail when fresh < baseline * (1 - rel_tol)
+    abs_floor: float = 0.0  # and always fail below this
+
+
+@dataclasses.dataclass(frozen=True)
+class Flag:
+    """A boolean invariant that must hold in the fresh results."""
+
+    bench: str
+    name: str
+    extract: Callable[[dict], bool]
+
+
+METRICS = [
+    Metric("BENCH_dispatch", "aggregate_speedup",
+           lambda d: float(d["headline"]["aggregate_speedup"]),
+           rel_tol=0.5, abs_floor=1.5),
+    Metric("BENCH_attention", "mean_skip_fraction",
+           lambda d: _mean(r["skip_fraction"] for r in d["rows"]),
+           rel_tol=0.1, abs_floor=0.25),
+    Metric("BENCH_attention", "min_skip_fraction",
+           lambda d: min(r["skip_fraction"] for r in d["rows"]),
+           rel_tol=0.1),
+    Metric("BENCH_serving", "slot_throughput_speedup",
+           lambda d: float(d["slot_throughput_speedup"]),
+           rel_tol=0.15, abs_floor=2.0),
+    Metric("BENCH_calibration", "recovered_fraction",
+           lambda d: float(d["recovered_fraction"]),
+           rel_tol=0.2, abs_floor=0.8),
+]
+
+FLAGS = [
+    Flag("BENCH_serving", "streams_match",
+         lambda d: bool(d["streams_match"])),
+    Flag("BENCH_calibration", "within_5pct_of_oracle",
+         lambda d: bool(d["within_5pct_of_oracle"])),
+    Flag("BENCH_dispatch", "max_cost_match",
+         lambda d: all(r["max_cost_match"] for r in d["rows"])),
+]
+
+
+def _load(path: str) -> dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def collect(fresh_dir: str) -> tuple[dict[str, float], list[str]]:
+    """Extract every gated metric from the fresh result files."""
+    values: dict[str, float] = {}
+    failures: list[str] = []
+    cache: dict[str, dict] = {}
+    for m in METRICS:
+        path = os.path.join(fresh_dir, m.bench + ".json")
+        if m.bench not in cache:
+            cache[m.bench] = _load(path)
+        values[f"{m.bench}.{m.name}"] = m.extract(cache[m.bench])
+    for fl in FLAGS:
+        path = os.path.join(fresh_dir, fl.bench + ".json")
+        if fl.bench not in cache:
+            cache[fl.bench] = _load(path)
+        if not fl.extract(cache[fl.bench]):
+            failures.append(f"FLAG {fl.bench}.{fl.name} does not hold")
+    return values, failures
+
+
+def compare(values: dict[str, float], baseline: dict[str, float]) -> list[str]:
+    failures = []
+    for m in METRICS:
+        key = f"{m.bench}.{m.name}"
+        fresh = values[key]
+        base = baseline.get(key)
+        if base is None:
+            # A gated metric with no committed baseline must fail loudly
+            # (someone added a Metric without running --update), never
+            # silently pass with floor=0.
+            failures.append(
+                f"{key} has no committed baseline entry; run "
+                f"`python -m benchmarks.check_regression --fresh-dir ... "
+                f"--update` and commit {BASELINE}")
+            continue
+        floor_parts = [base * (1.0 - m.rel_tol)]
+        if m.abs_floor:
+            floor_parts.append(m.abs_floor)
+        floor = max(floor_parts)
+        status = "OK " if fresh >= floor else "FAIL"
+        print(f"{status} {key}: fresh={fresh:.4f} "
+              f"baseline={base if base is not None else 'n/a'} "
+              f"floor={floor:.4f} (rel_tol={m.rel_tol:.0%})")
+        if fresh < floor:
+            failures.append(
+                f"{key} regressed: {fresh:.4f} < floor {floor:.4f} "
+                f"(baseline {base}, rel_tol {m.rel_tol:.0%})")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory holding the fresh BENCH_*.json smoke "
+                         "results")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: {BASELINE} next to the "
+                         f"repo's committed artifacts)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh results "
+                         "instead of gating")
+    args = ap.parse_args()
+    baseline_path = args.baseline or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), BASELINE)
+
+    values, flag_failures = collect(args.fresh_dir)
+    if args.update:
+        doc = {
+            "note": "Committed smoke-run headline metrics; CI's "
+                    "bench-regression step gates fresh --smoke runs "
+                    "against these with per-metric tolerance bands "
+                    "(benchmarks/check_regression.py).",
+            "metrics": values,
+        }
+        with open(baseline_path, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"baseline updated: {baseline_path}")
+        if flag_failures:
+            print("\n".join(flag_failures))
+            sys.exit(1)
+        return
+
+    baseline = _load(baseline_path)["metrics"]
+    failures = flag_failures + compare(values, baseline)
+    if failures:
+        print("\nBENCH REGRESSION:")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    print("\nbench-regression OK: all headline metrics within tolerance")
+
+
+if __name__ == "__main__":
+    main()

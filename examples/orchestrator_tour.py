@@ -11,8 +11,7 @@ rearrangement's inter-node reduction (Eq. 5).
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.cost_model import CostModel
-from repro.core.orchestrator import MLLMGlobalOrchestrator, llm_cost_model
+from repro.core.orchestrator import MLLMGlobalOrchestrator
 from repro.data.synthetic import sample_examples
 
 

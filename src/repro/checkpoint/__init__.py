@@ -1,0 +1,49 @@
+"""Fault-tolerant checkpointing with elastic DP resume.
+
+``store``   -- dependency-free sharded pytree store (atomic commit,
+               content hashes, keep-last-K retention, corruption
+               fallback).
+``state``   -- versioned :class:`TrainState` bundling params, optimizer
+               state, RNG key, step counter, data cursor, and telemetry
+               calibrator state.
+``elastic`` -- restore onto a different DP degree: host-side leaf
+               resharding from manifest specs plus cursor rewriting;
+               post-balancing is re-solved for the new shard count.
+"""
+from repro.checkpoint.elastic import (
+    ElasticResumeError,
+    elastic_cursor,
+    meta_to_spec,
+    reshard_pytree,
+)
+from repro.checkpoint.state import (
+    DataCursor,
+    TrainState,
+    restore_train_state,
+    save_train_state,
+)
+from repro.checkpoint.store import (
+    CheckpointCorruptError,
+    CheckpointManager,
+    LeafInfo,
+    load_manifest,
+    load_pytree,
+    save_pytree,
+)
+
+__all__ = [
+    "CheckpointCorruptError",
+    "CheckpointManager",
+    "DataCursor",
+    "ElasticResumeError",
+    "LeafInfo",
+    "TrainState",
+    "elastic_cursor",
+    "load_manifest",
+    "load_pytree",
+    "meta_to_spec",
+    "reshard_pytree",
+    "restore_train_state",
+    "save_pytree",
+    "save_train_state",
+]

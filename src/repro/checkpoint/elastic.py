@@ -1,0 +1,137 @@
+"""Elastic resume: restore a checkpoint onto a different DP world size.
+
+This is where checkpointing meets the paper's core machinery.  Classic
+data pipelines require the new DP degree to divide the old per-shard
+layout; here nothing of the sort is needed, because the Batch
+Post-Balancing Dispatcher re-solves example->shard assignments from
+scratch every step.  Elastic resume therefore reduces to three
+host-side moves:
+
+  1. **Reshard the leaves.**  Checkpoint shards are stored as full
+     host arrays; the manifest carries each leaf's original
+     ``PartitionSpec``.  :func:`reshard_pytree` re-places every leaf
+     onto the *new* mesh, dropping any spec axis the new mesh cannot
+     honor (missing axis name or non-divisible dim) back to replicated.
+  2. **Rewrite the data cursor.**  :func:`elastic_cursor` keeps the
+     *global* batch (``d * examples_per_instance``) invariant and
+     re-splits it across the new shard count, so the sampled example
+     stream -- and hence the loss trajectory -- is unchanged up to
+     floating-point reduction order.
+  3. **Re-solve post-balancing.**  The caller rebuilds the orchestrator
+     and loader at the new ``d`` (fresh ``Capacities``, fresh plan-ahead
+     worker); any plan-ahead state from the old world size is invalid by
+     construction and simply never restored -- plans are a pure function
+     of (examples, d) and are recomputed on the first step.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.checkpoint.state import DataCursor
+from repro.checkpoint.store import LeafInfo
+
+__all__ = [
+    "ElasticResumeError",
+    "elastic_cursor",
+    "meta_to_spec",
+    "reshard_pytree",
+]
+
+
+class ElasticResumeError(ValueError):
+    """The requested world-size change cannot preserve the data stream."""
+
+
+def elastic_cursor(cursor: DataCursor, new_d: int) -> DataCursor:
+    """Re-split the cursor's global batch across ``new_d`` DP shards.
+
+    The global batch size must stay invariant (that is what makes the
+    resumed loss trajectory comparable), so ``new_d`` must divide
+    ``cursor.total_examples``.
+    """
+    if new_d < 1:
+        raise ElasticResumeError(f"need new_d >= 1, got {new_d}")
+    if cursor.d == new_d:
+        return cursor
+    total = cursor.total_examples
+    if total % new_d:
+        raise ElasticResumeError(
+            f"global batch of {total} examples does not split across "
+            f"{new_d} DP shards (was {cursor.d} x "
+            f"{cursor.examples_per_instance}); pick a divisor of {total}"
+        )
+    return DataCursor(
+        seed=cursor.seed,
+        batch_index=cursor.batch_index,
+        examples_per_instance=total // new_d,
+        d=new_d,
+    )
+
+
+def meta_to_spec(meta: list[Any] | None, shape: tuple[int, ...], mesh: Any):
+    """Manifest spec metadata -> a PartitionSpec valid on ``mesh``.
+
+    Every recorded axis is kept only if the new mesh has it AND the
+    corresponding array dim divides by its (new) size; otherwise that
+    dim falls back to replicated.  This is what lets a checkpoint
+    written under ``data=4`` land on a ``data=2`` (or ``data=8``) mesh
+    without any divisibility precondition on the *old* layout.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if meta is None or mesh is None:
+        return P()
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts: list[Any] = []
+    for dim, entry in enumerate(meta):
+        if entry is None:
+            parts.append(None)
+            continue
+        names = [entry] if isinstance(entry, str) else list(entry)
+        if any(n not in axis_sizes for n in names):
+            parts.append(None)
+            continue
+        size = int(np.prod([axis_sizes[n] for n in names]))
+        if dim >= len(shape) or size < 1 or shape[dim] % size:
+            parts.append(None)
+            continue
+        parts.append(entry if isinstance(entry, str) else tuple(names))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def reshard_pytree(tree: Any, manifest: dict[str, Any], mesh: Any) -> Any:
+    """Host-side reshard of a restored tree onto ``mesh``.
+
+    With ``mesh=None`` (single-host tests, CPU smoke runs) this is the
+    identity.  Otherwise every leaf is ``device_put`` under the spec
+    rebuilt by :func:`meta_to_spec` from its manifest row.
+    """
+    if mesh is None:
+        return tree
+    import jax
+    from jax.sharding import NamedSharding
+
+    infos = {row["path"]: LeafInfo.from_json(row) for row in manifest["leaves"]}
+
+    def walk(node: Any, path: str) -> Any:
+        if isinstance(node, dict):
+            return {
+                k: walk(v, f"{path}/{k}" if path else str(k))
+                for k, v in node.items()
+            }
+        if isinstance(node, (list, tuple)):
+            seq = [
+                walk(v, f"{path}/{i}" if path else str(i))
+                for i, v in enumerate(node)
+            ]
+            return seq if isinstance(node, list) else tuple(seq)
+        info = infos.get(path)
+        spec_meta = info.spec if info is not None else None
+        spec = meta_to_spec(spec_meta, np.shape(node), mesh)
+        return jax.device_put(node, NamedSharding(mesh, spec))
+
+    return walk(tree, "")

@@ -37,13 +37,10 @@ tests, executed only on hardware that supports it).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 # jax.shard_map landed in 0.5.x; older releases ship it as experimental.
 if hasattr(jax, "shard_map"):
@@ -278,7 +275,6 @@ def apply_comm_plan(
     Returns [total_shards * cap_out, ...] global array, same sharding.
     """
     d = int(np.prod([mesh.shape[a] for a in dp_axes]))
-    cap_in = x.shape[0] // d
     # post_mask is the one plan array every mode carries.
     cap_out = plan_arrays["post_mask"].shape[-1]
     feat = x.shape[1:]

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.communicator import CommPlan, build_comm_plan
-from repro.core.cost_model import CostModel, encoder_cost_model, llm_cost_model
+from repro.core.cost_model import encoder_cost_model, llm_cost_model
 from repro.core.dispatcher import BatchPostBalancingDispatcher, DispatchPlan
 from repro.core.rearrangement import Rearrangement, compose
 from repro.data.packing import pack_padded_stream, pack_stream

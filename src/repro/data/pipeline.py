@@ -15,6 +15,17 @@ both the worker's own packing and the consumer's forward pass -- the
 per-step ``report.exposed_ms`` then measures how much dispatcher time
 was actually left on the critical path (~0 when fully hidden).
 ``overlap_stats()`` aggregates it for the Table-2 analog.
+
+Determinism contract (checkpoint resume): batch i's sampling RNG is
+derived from ``(seed, i, attempt)`` -- never from wall time, thread
+interleaving, or how many batches a previous consumer took.  A loader
+constructed with ``start_index=i`` therefore replays the exact stream
+an uninterrupted loader would have produced from batch i on, which is
+what makes ``repro.checkpoint``'s save->resume loss trajectory bitwise
+reproducible.  The retry path (capacity overflow on a pathological
+draw) bumps ``attempt`` deterministically instead of consuming from a
+shared stream.  ``cursor`` is the index of the next batch the consumer
+will receive -- the value a checkpoint's ``DataCursor`` records.
 """
 from __future__ import annotations
 
@@ -44,11 +55,13 @@ class PrefetchingLoader:
         sampler: Callable[[np.random.Generator, int], list[Example]] | None = None,
         depth: int = 2,
         plan_ahead: bool = True,
+        start_index: int = 0,
     ) -> None:
         self.orch = orchestrator
         self.caps = caps
         self.per = examples_per_instance
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.start_index = start_index
         self.mix = mix
         self.modalities = modalities
         self.sampler = sampler
@@ -57,58 +70,83 @@ class PrefetchingLoader:
         self.solve_ms_total = 0.0
         self.exposed_ms_total = 0.0
         self.batches_produced = 0
+        self.batches_consumed = 0
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
-    def _sample(self) -> list[list[Example]]:
+    @property
+    def cursor(self) -> int:
+        """Index of the next batch the consumer will receive -- what a
+        checkpoint's ``DataCursor.batch_index`` records."""
+        return self.start_index + self.batches_consumed
+
+    def _batch_rng(self, index: int, attempt: int) -> np.random.Generator:
+        """Batch ``index``'s deterministic RNG; ``attempt`` bumps on the
+        (rare) capacity-overflow resample so retries stay replayable."""
+        return np.random.default_rng((int(self.seed), int(index), int(attempt)))
+
+    def _sample(self, index: int, attempt: int = 0) -> list[list[Example]]:
         # Each DP instance samples independently (batching randomness,
-        # paper S2.3) -- post-balancing happens AFTER this step.
+        # paper S2.3) -- post-balancing happens AFTER this step.  All d
+        # instances draw sequentially from ONE per-index stream, so the
+        # flattened example list depends only on (seed, index, attempt,
+        # d*per): an elastic resume that re-splits the same global batch
+        # across a different d sees the identical example multiset.
+        rng = self._batch_rng(index, attempt)
         out = []
         for _ in range(self.orch.d):
             if self.sampler is not None:
-                out.append(self.sampler(self.rng, self.per))
+                out.append(self.sampler(rng, self.per))
             else:
-                out.append(sample_examples(self.rng, self.per, self.mix,
+                out.append(sample_examples(rng, self.per, self.mix,
                                            self.modalities))
         return out
 
     def _worker(self) -> None:
-        pending = None  # (examples, PlanAheadHandle) for the next step
+        index = self.start_index
+        attempts = 0
+        pending = None  # (index, examples, PlanAheadHandle) for index+1
         while not self._stop.is_set():
             t0 = time.perf_counter()
-            if pending is None:
-                examples = self._sample()
+            if pending is not None and pending[0] == index:
+                _, examples, handle = pending
+                pending = None
+            else:
+                examples = self._sample(index, attempts)
                 handle = (self.orch.plan_ahead(examples, self.caps)
                           if self.plan_ahead else None)
-            else:
-                examples, handle = pending
-                pending = None
-            if self.plan_ahead:
+            if self.plan_ahead and (pending is None or pending[0] != index + 1):
                 # Launch step k+1's plans before packing step k: the
                 # solve overlaps our packing of step k AND the consumer's
                 # forward pass, so by the time the worker loops around
-                # the plans are ready (exposed ~ 0).
-                nxt = self._sample()
-                pending = (nxt, self.orch.plan_ahead(nxt, self.caps))
+                # the plans are ready (exposed ~ 0).  On a retry of step
+                # k the still-valid pending plan for k+1 is kept as is.
+                nxt = self._sample(index + 1)
+                pending = (index + 1, nxt, self.orch.plan_ahead(nxt, self.caps))
             try:
+                rng = self._batch_rng(index, attempts)
                 if handle is not None:
                     plans, exposed_ms = handle.result()
                     batch, report = self.orch.plan_and_pack(
-                        examples, self.caps, self.rng, plans,
+                        examples, self.caps, rng, plans,
                         exposed_ms=exposed_ms,
                     )
                 else:
                     batch, report = self.orch.plan_and_pack(
-                        examples, self.caps, self.rng)
+                        examples, self.caps, rng)
             except ValueError:
-                # Capacity overflow on a pathological draw: resample.
+                # Capacity overflow on a pathological draw: retry the
+                # SAME index with a bumped attempt counter (replayable).
+                attempts += 1
                 continue
             dt = (time.perf_counter() - t0) * 1e3
             self.solve_ms_total += report.solve_ms
             self.exposed_ms_total += report.exposed_ms
             self.batches_produced += 1
             item = (batch, report, dt)
+            index += 1
+            attempts = 0
             while not self._stop.is_set():
                 try:
                     self.q.put(item, timeout=0.1)
@@ -120,7 +158,9 @@ class PrefetchingLoader:
         return self
 
     def __next__(self):
-        return self.q.get()
+        item = self.q.get()
+        self.batches_consumed += 1
+        return item
 
     def overlap_stats(self) -> dict[str, float]:
         n = max(self.batches_produced, 1)

@@ -7,6 +7,16 @@ the same entrypoint runs the full configs under the production mesh.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3_8b --smoke \
         --steps 20 --d 4
+
+Fault tolerance: ``--ckpt-dir DIR --ckpt-every N`` snapshots the full
+:class:`~repro.checkpoint.TrainState` (params, optimizer state, data
+cursor, calibrator state) atomically every N steps with keep-last-K
+retention; ``--resume`` restores the newest complete checkpoint (corrupt
+ones are flagged and skipped) and continues bit-deterministically.
+Resuming with a *different* ``--d`` than the checkpoint's is the elastic
+path: the global batch is re-split across the new DP degree and the
+Batch Post-Balancing Dispatcher re-solves assignments for the new shard
+count -- no divisibility requirement between old and new world sizes.
 """
 from __future__ import annotations
 
@@ -18,11 +28,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import (
+    CheckpointManager,
+    DataCursor,
+    TrainState,
+    elastic_cursor,
+    reshard_pytree,
+    restore_train_state,
+    save_train_state,
+)
 from repro.configs import get_config
 from repro.core.orchestrator import MLLMGlobalOrchestrator
 from repro.data.pipeline import PrefetchingLoader
 from repro.data.synthetic import Example
-from repro.sharding.specs import batch_specs, opt_state_specs, param_specs, to_shardings
+from repro.sharding.specs import opt_state_specs, param_specs, to_shardings
 from repro.telemetry import AdaptiveOrchestration
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_step import init_train_state, make_train_step
@@ -62,6 +81,7 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=4, help="DP instances")
     ap.add_argument("--per", type=int, default=4, help="examples/instance")
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0, help="data stream seed")
     ap.add_argument("--mesh", choices=["none", "host"], default="none",
                     help="'host': shard over all local devices on a "
                          "(data, model) mesh")
@@ -72,6 +92,15 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None,
                     help="write the telemetry Chrome-trace/Perfetto JSON "
                          "here on exit (requires --adaptive)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint root (enables checkpointing)")
+    ap.add_argument("--ckpt-every", type=int, default=5,
+                    help="save a checkpoint every N steps")
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="retention: keep the newest K checkpoints")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest complete checkpoint in "
+                         "--ckpt-dir (elastic when --d differs)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -86,28 +115,101 @@ def main() -> None:
         n = len(jax.devices())
         mesh = jax.make_mesh((n, 1), ("data", "model"))
 
+    manager = None
+    if args.ckpt_dir:
+        manager = CheckpointManager(args.ckpt_dir, keep_last=args.keep_last)
+
     adaptive = AdaptiveOrchestration(cfg) if args.adaptive else None
-    orch = MLLMGlobalOrchestrator(cfg, args.d, vocab=cfg.vocab_size,
+    cursor = DataCursor(seed=args.seed, batch_index=0,
+                        examples_per_instance=args.per, d=args.d)
+    start_step = 0
+    params = opt_state = None
+    resumed_on_mesh = False
+    if args.resume:
+        if manager is None:
+            raise SystemExit("--resume requires --ckpt-dir")
+        found = restore_train_state(manager)
+        if found is None:
+            print("no restorable checkpoint found; starting fresh")
+        else:
+            state, manifest = found
+            params, opt_state = state.params, state.opt_state
+            start_step = state.step
+            if args.seed != state.cursor.seed:
+                print(f"warning: --seed {args.seed} ignored on resume; "
+                      f"continuing the checkpoint's stream "
+                      f"(seed {state.cursor.seed})")
+            if (args.d == state.cursor.d
+                    and args.per != state.cursor.examples_per_instance):
+                print(f"warning: --per {args.per} ignored on resume; "
+                      f"keeping the checkpoint's "
+                      f"{state.cursor.examples_per_instance}/instance")
+            cursor = state.cursor
+            if args.d != cursor.d:
+                old_d = cursor.d
+                cursor = elastic_cursor(cursor, args.d)
+                print(f"elastic resume: DP {old_d} -> {cursor.d} "
+                      f"(per-instance {cursor.examples_per_instance}); "
+                      f"post-balancing will re-solve for the new shard "
+                      f"count")
+            if mesh is not None:
+                # Reshard the tree AS SAVED so leaf paths line up with
+                # the manifest's spec rows ('params/...', 'opt_state/...').
+                # This is the only device placement on the resume path
+                # (the fresh-start device_put below is skipped).
+                resharded = reshard_pytree(
+                    {"params": params, "opt_state": opt_state},
+                    manifest, mesh)
+                params = resharded["params"]
+                opt_state = resharded["opt_state"]
+                resumed_on_mesh = True
+            if adaptive is not None and state.calibrator is not None:
+                adaptive.load_state_dict(state.calibrator)
+            print(f"resumed from step {start_step} "
+                  f"(cursor batch {cursor.batch_index})")
+
+    orch = MLLMGlobalOrchestrator(cfg, cursor.d, vocab=cfg.vocab_size,
                                   adaptive=adaptive)
     sampler = _sampler_for(cfg)
-    probe = [sampler(np.random.default_rng(s), args.per) for s in range(args.d)]
+    probe = [sampler(np.random.default_rng(s), cursor.examples_per_instance)
+             for s in range(cursor.d)]
     caps = orch.default_capacities(probe, margin=3.0)
-    loader = PrefetchingLoader(orch, caps, examples_per_instance=args.per,
-                               sampler=sampler)
+    loader = PrefetchingLoader(
+        orch, caps, examples_per_instance=cursor.examples_per_instance,
+        seed=cursor.seed, sampler=sampler, start_index=cursor.batch_index)
 
-    params, opt_state = init_train_state(cfg, jax.random.PRNGKey(0))
+    if params is None:
+        params, opt_state = init_train_state(cfg, jax.random.PRNGKey(0))
     step_fn = make_train_step(cfg, AdamWConfig(lr=args.lr), mesh=mesh,
                               dp_axes=dp_axes)
+    p_specs = None
     if mesh is not None:
         p_specs = param_specs(cfg, params, mesh)
-        params = jax.device_put(params, to_shardings(p_specs, mesh))
-        step = jax.jit(step_fn, donate_argnums=(0, 1))
-    else:
-        step = jax.jit(step_fn, donate_argnums=(0, 1))
+        if not resumed_on_mesh:  # resume already placed via the manifest
+            params = jax.device_put(params, to_shardings(p_specs, mesh))
+    step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    def save_ckpt(next_step: int) -> None:
+        specs = None
+        if p_specs is not None:
+            specs = {"params": p_specs, "opt_state": opt_state_specs(p_specs)}
+        state = TrainState(
+            params=jax.device_get(params),
+            opt_state=jax.device_get(opt_state),
+            step=next_step,
+            cursor=DataCursor(seed=cursor.seed, batch_index=loader.cursor,
+                              examples_per_instance=cursor.examples_per_instance,
+                              d=cursor.d),
+            calibrator=adaptive.state_dict() if adaptive else None,
+        )
+        path = save_train_state(manager, state, specs=specs,
+                                meta={"arch": cfg.name})
+        print(f"checkpoint: step {next_step} -> {path}", flush=True)
 
     t0 = time.time()
+    done = start_step
     try:
-        for it in range(args.steps):
+        for it in range(start_step, args.steps):
             batch_np, report, _ = next(loader)
             batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
             ts = time.perf_counter()
@@ -118,20 +220,29 @@ def main() -> None:
                 # path keeps async dispatch overlap).
                 jax.block_until_ready(m["loss"])
                 step_ms = (time.perf_counter() - ts) * 1e3
-                if it > 0:
-                    # Skip step 0 (dominated by XLA compilation).  The
+                if it > start_step:
+                    # Skip the process's first step (dominated by XLA
+                    # compilation -- also the first step AFTER a resume,
+                    # which recompiles in the fresh process).  The
                     # whole-step time is attributed to the LLM backbone
                     # phase -- on a CPU smoke run the encoders are
                     # noise; a per-phase profiler would feed each phase.
                     orch.observe_phase_times({"llm": step_ms},
                                              report=report, step=it)
+            done = it + 1
+            if manager is not None and args.ckpt_every > 0 \
+                    and done % args.ckpt_every == 0 and done < args.steps:
+                save_ckpt(done)
             if it % 5 == 0 or it == args.steps - 1:
+                denom = max(it + 1 - start_step, 1)
                 print(f"step {it:4d} loss={float(m['loss']):.4f} "
                       f"gnorm={float(m['grad_norm']):.2f} "
                       f"util={report.phase_utilization['llm']:.2f} "
-                      f"{(time.time()-t0)/(it+1):.2f}s/step", flush=True)
+                      f"{(time.time()-t0)/denom:.2f}s/step", flush=True)
     finally:
         loader.close()
+    if manager is not None and done > start_step:
+        save_ckpt(done)
     if adaptive is not None:
         print("telemetry calibration summary:")
         print(json.dumps(adaptive.summary(), indent=1, default=str))

@@ -30,8 +30,6 @@ caller), causal & bidirectional, and cross-attention (whisper decoder).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -129,9 +127,6 @@ def _chunked(q, k, v, q_seg, kv_seg, q_pos, kv_pos, *, causal, window,
     vb = v.reshape(B, nk, bkv, v.shape[2], D)
     ksb = kv_seg.reshape(B, nk, bkv)
     kpb = kv_pos.reshape(B, nk, bkv)
-
-    Hkv = k.shape[2]
-    g = H // Hkv
 
     def process_block(qi, qs, qp, kj, vj, ks, kp):
         # qi [B,bq,H,D]; kj [B,bkv,Hkv,D]

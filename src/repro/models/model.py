@@ -26,7 +26,6 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import EncoderConfig, ModelConfig
 from repro.models.layers import init_dense, layer_norm, rms_norm
@@ -131,8 +130,6 @@ def _init_encoder(key, e: EncoderConfig, d_llm: int, dt) -> Params:
         "conn_out": init_dense(ks[2], (d_llm, d_llm), dt),
     }
     if L > 0:
-        H = e.n_heads
-        hd = D // H
         p["layers"] = {
             "attn_norm": jnp.ones((L, D), dt),
             "mlp_norm": jnp.ones((L, D), dt),

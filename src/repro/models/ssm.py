@@ -14,8 +14,6 @@ shape is SSM/hybrid-only).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -171,7 +169,6 @@ def mamba1_decode_step(p, x_t, state, *, ssm_state: int):
     """x_t [B,d]; state dict {conv: [B,K-1,di], h: [B,di,N]}."""
     xz = jnp.einsum("bd,de->be", x_t, p["in_proj"])
     xi, z = jnp.split(xz, 2, axis=-1)
-    K = p["conv_w"].shape[0]
     conv_in = jnp.concatenate([state["conv"], xi[:, None, :]], axis=1)  # [B,K,di]
     xi = (conv_in * p["conv_w"][None]).sum(axis=1)
     new_conv = conv_in[:, 1:]

@@ -15,7 +15,6 @@ Families:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax
@@ -25,12 +24,7 @@ from repro.configs.base import ModelConfig
 from repro.models.attention import attention, windowed_variant
 from repro.models.layers import apply_rope, gelu_mlp, layer_norm, rms_norm, rotary_embedding, swiglu
 from repro.models.moe import moe_ffn
-from repro.models.ssm import (
-    mamba1_block,
-    mamba1_decode_step,
-    mamba2_block,
-    mamba2_decode_step,
-)
+from repro.models.ssm import mamba1_block, mamba2_block
 
 Params = dict[str, Any]
 

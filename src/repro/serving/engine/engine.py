@@ -69,6 +69,13 @@ class StepTiming:
     prefill_tokens: int  # tokens prefilled this step (recompute included)
     n_decode_seqs: int
 
+    def to_state_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_state_dict(d: dict) -> "StepTiming":
+        return StepTiming(**d)
+
 
 @dataclasses.dataclass
 class EngineReport:
@@ -433,6 +440,116 @@ class Engine:
             self.running.remove(seq)
 
     # ------------------------------------------------------------------
+    # Snapshot / restore: scheduler + request lifecycle state.  KV pages
+    # are deliberately NOT serialized -- a restored in-flight sequence
+    # re-enters through the SAME preemption-recompute path the scheduler
+    # uses under pool pressure (full_prompt() teacher-forces the tokens
+    # generated so far), so with greedy sampling the continued output
+    # stream is bitwise the stream an uninterrupted engine produces.
+    def snapshot(self) -> dict:
+        """JSON-able engine state: every request's lifecycle, the
+        scheduler queues (by req_id), counters, and per-step timings."""
+        return {
+            "replica_id": self.replica_id,
+            "n_steps": self.n_steps,
+            "token_slots": self.token_slots,
+            "prompt_tokens": self.prompt_tokens,
+            "recompute_tokens": self.recompute_tokens,
+            "generated_tokens": self.generated_tokens,
+            "occupancy_samples": [float(x) for x in self.occupancy_samples],
+            "budget_fracs": [float(x) for x in self.budget_fracs],
+            "wall_s": self._wall_s,
+            "rng_calls": self._rng_calls,
+            "requests": [r.to_state_dict() for r in self.requests],
+            "waiting": [s.seq_id for s in self.waiting],
+            "running": [s.seq_id for s in self.running],
+            "step_timings": [t.to_state_dict() for t in self.step_timings],
+            "cost_model": (self.scheduler.cost_model.state_dict()
+                           if hasattr(self.scheduler.cost_model,
+                                      "state_dict") else None),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild a drained replica's state from :meth:`snapshot`.
+
+        Must be called on a fresh (empty) engine.  Former RUNNING
+        sequences are re-queued WAITING through the recompute path;
+        their KV pages are regenerated on re-admission."""
+        if self.requests or self.waiting or self.running:
+            raise ValueError("restore() needs a fresh engine "
+                             "(this one already has requests)")
+        if int(snap["replica_id"]) != self.replica_id:
+            raise ValueError(
+                f"snapshot is replica {snap['replica_id']}, this engine "
+                f"is replica {self.replica_id} (use export_unfinished/"
+                f"admit_serialized to MOVE work between replicas)")
+        self.n_steps = int(snap["n_steps"])
+        self.token_slots = int(snap["token_slots"])
+        self.prompt_tokens = int(snap["prompt_tokens"])
+        self.recompute_tokens = int(snap["recompute_tokens"])
+        self.generated_tokens = int(snap["generated_tokens"])
+        self.occupancy_samples = list(snap["occupancy_samples"])
+        self.budget_fracs = list(snap["budget_fracs"])
+        self._wall_s = float(snap["wall_s"])
+        self._rng_calls = int(snap["rng_calls"])
+        self.step_timings = [StepTiming.from_state_dict(t)
+                             for t in snap["step_timings"]]
+        cm_state = snap.get("cost_model")
+        if cm_state is not None and hasattr(self.scheduler.cost_model,
+                                           "load_state_dict"):
+            self.scheduler.cost_model.load_state_dict(cm_state)
+        was_running = set(snap["running"])
+        for d in snap["requests"]:
+            self._admit_restored(Request.from_state_dict(d),
+                                 recompute=d["req_id"] in was_running)
+
+    def _admit_restored(self, req: Request, *, recompute: bool) -> None:
+        """One shared admission path for snapshot restore AND replica
+        handoff: an in-flight request goes through the state machine's
+        preemption transition (DECODE -> WAITING recompute), exactly as
+        the scheduler evicts under pool pressure."""
+        req.replica = self.replica_id
+        self.requests.append(req)
+        if req.state is RequestState.FINISHED:
+            return
+        if req.state is RequestState.DECODE and recompute:
+            req.preempt()
+        elif req.state is not RequestState.WAITING:
+            # PREFILL never survives a step boundary; normalize anything
+            # unexpected to WAITING without touching preemption counts.
+            req.state = RequestState.WAITING
+        seq = SequenceState(req)
+        seq.reset()
+        self.waiting.append(seq)
+
+    def export_unfinished(self) -> list[dict]:
+        """Drain this replica: serialize and REMOVE every unfinished
+        request (blocks freed), leaving finished history in place for
+        reporting.  Feed the result to another replica's
+        :meth:`admit_serialized` -- together they are the handoff path
+        ``MultiReplicaEngine.handoff`` uses."""
+        out = []
+        for seq in list(self.running):
+            self.pool.free(seq.seq_id)
+            self.running.remove(seq)
+            if seq.request.state is RequestState.DECODE:
+                seq.request.preempt()  # shared recompute transition
+            out.append(seq.request.to_state_dict())
+            self.requests.remove(seq.request)
+        for seq in list(self.waiting):
+            self.waiting.remove(seq)
+            out.append(seq.request.to_state_dict())
+            self.requests.remove(seq.request)
+        return out
+
+    def admit_serialized(self, reqs: Sequence[dict]) -> None:
+        """Admit serialized requests (from :meth:`export_unfinished` or
+        an external queue) through the shared restore path."""
+        for d in reqs:
+            self._admit_restored(Request.from_state_dict(d),
+                                 recompute=False)
+
+    # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request] = (), *,
             max_steps: int = 100_000) -> EngineReport:
         """Drive to completion: submit each request when the step clock
@@ -504,6 +621,37 @@ class MultiReplicaEngine:
         # with the global arrival clock (TTFT-in-steps consistency).
         for e in self.engines:
             e.step()
+
+    # ------------------------------------------------------------------
+    def handoff(self, src: int, dst: int) -> int:
+        """Drain replica ``src`` and move its unfinished requests to
+        ``dst`` -- the replica-failure / rolling-restart path.
+
+        Routed entirely through ``Engine.export_unfinished`` /
+        ``Engine.admit_serialized``, i.e. the same snapshot/restore and
+        preemption-recompute code paths the scheduler and the unit tests
+        exercise: in-flight DECODE sequences take the state machine's
+        preempt transition and re-prefill their full context at ``dst``
+        (KV pages are never copied between pools).  Returns how many
+        requests moved."""
+        if src == dst:
+            raise ValueError("handoff needs distinct src/dst replicas")
+        moved = self.engines[src].export_unfinished()
+        self.engines[dst].admit_serialized(moved)
+        return len(moved)
+
+    def snapshot(self) -> list[dict]:
+        """Per-replica ``Engine.snapshot`` list (whole-cluster state)."""
+        return [e.snapshot() for e in self.engines]
+
+    def restore(self, snaps: Sequence[dict]) -> None:
+        """Restore a whole-cluster snapshot onto fresh replicas."""
+        if len(snaps) != len(self.engines):
+            raise ValueError(
+                f"snapshot has {len(snaps)} replicas, engine has "
+                f"{len(self.engines)}")
+        for e, snap in zip(self.engines, snaps):
+            e.restore(snap)
 
     def run(self, requests: Sequence[Request] = (), *,
             max_steps: int = 100_000) -> EngineReport:

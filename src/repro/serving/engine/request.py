@@ -117,6 +117,49 @@ class Request:
         self.state = RequestState.WAITING
         self.n_preemptions += 1
 
+    # -- serialization (engine snapshot / replica handoff) --------------
+    def to_state_dict(self) -> dict:
+        """JSON-able lifecycle state.  KV-cache contents are NOT part of
+        a request's state: a restored in-flight request re-enters
+        through the preemption-recompute path (teacher-forcing
+        ``output_tokens``), which regenerates the pages exactly."""
+        return {
+            "req_id": self.req_id,
+            "prompt": self.prompt.tolist(),
+            "max_new_tokens": self.max_new_tokens,
+            "modality_tokens": dict(self.modality_tokens),
+            "arrival_time": self.arrival_time,
+            "arrival_step": self.arrival_step,
+            "state": self.state.value,
+            "output_tokens": list(self.output_tokens),
+            "first_token_time": self.first_token_time,
+            "first_token_step": self.first_token_step,
+            "finish_time": self.finish_time,
+            "finish_step": self.finish_step,
+            "n_preemptions": self.n_preemptions,
+            "replica": self.replica,
+        }
+
+    @staticmethod
+    def from_state_dict(d: dict) -> "Request":
+        req = Request(
+            req_id=int(d["req_id"]),
+            prompt=np.asarray(d["prompt"], np.int32),
+            max_new_tokens=int(d["max_new_tokens"]),
+            modality_tokens=dict(d["modality_tokens"]),
+            arrival_time=float(d["arrival_time"]),
+            arrival_step=int(d["arrival_step"]),
+        )
+        req.state = RequestState(d["state"])
+        req.output_tokens = [int(t) for t in d["output_tokens"]]
+        req.first_token_time = d["first_token_time"]
+        req.first_token_step = d["first_token_step"]
+        req.finish_time = d["finish_time"]
+        req.finish_step = d["finish_step"]
+        req.n_preemptions = int(d["n_preemptions"])
+        req.replica = d["replica"]
+        return req
+
 
 @dataclasses.dataclass
 class SequenceState:

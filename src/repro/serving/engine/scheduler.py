@@ -36,7 +36,7 @@ from repro.configs.base import EngineConfig
 from repro.core.balancing import post_balance
 from repro.core.cost_model import ServingCostModel, serving_cost_model
 from repro.serving.engine.kv_pool import PagedKVPool
-from repro.serving.engine.request import Request, RequestState, SequenceState
+from repro.serving.engine.request import Request, SequenceState
 
 __all__ = ["StepPlan", "Scheduler", "serving_cost_model", "assign_replicas"]
 

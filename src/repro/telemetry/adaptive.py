@@ -143,6 +143,23 @@ class AdaptiveCostModel:
         i = int(np.argmax(costs))
         return self.observe(F[i], float(wall_ms), step=step, shards=[i])
 
+    # -- checkpointing --------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able dynamic state: calibrator window + the currently
+        served coefficients and version (the prior is reconstructed from
+        the config at restore time, not serialized)."""
+        return {
+            "calibrator": self.calibrator.state_dict(),
+            "alpha": self._current.alpha,
+            "beta": self._current.beta,
+            "version": self._version,
+        }
+
+    def load_state_dict(self, state) -> None:
+        self.calibrator.load_state_dict(state["calibrator"])
+        self._current = self.prior.with_coeffs(state["alpha"], state["beta"])
+        self._version = int(state["version"])
+
     def summary(self) -> dict:
         est = self.estimate
         return {
@@ -236,6 +253,21 @@ class AdaptiveOrchestration:
             self.trace.add(PhaseSample(
                 phase=phase, shard=0, step=step,
                 features=np.zeros(4), wall_ms=float(ms), kind="plan"))
+
+    # -- checkpointing --------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able calibration state for all phases (the trace ring is
+        diagnostic telemetry and deliberately NOT checkpointed)."""
+        return {
+            "step": self._step,
+            "models": {n: m.state_dict() for n, m in self.models.items()},
+        }
+
+    def load_state_dict(self, state) -> None:
+        self._step = int(state["step"])
+        for name, sub in state["models"].items():
+            if name in self.models:
+                self.models[name].load_state_dict(sub)
 
     def summary(self) -> dict[str, dict]:
         return {name: m.summary() for name, m in self.models.items()}
@@ -353,6 +385,25 @@ class AdaptiveServingCostModel:
                 return True
         od, nd = old.decode_cost, new.decode_cost
         return abs(nd - od) / max(abs(od), abs(nd), 1e-12) > self.replan_tol
+
+    # -- checkpointing --------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able dynamic state (serving replica handoff /
+        checkpoint): calibrator window + currently served weights."""
+        return {
+            "calibrator": self.calibrator.state_dict(),
+            "modality_weights": dict(self._current.modality_weights),
+            "decode_cost": self._current.decode_cost,
+            "version": self._version,
+        }
+
+    def load_state_dict(self, state) -> None:
+        self.calibrator.load_state_dict(state["calibrator"])
+        self._current = dataclasses.replace(
+            self.prior,
+            modality_weights=dict(state["modality_weights"]),
+            decode_cost=float(state["decode_cost"]))
+        self._version = int(state["version"])
 
     def summary(self) -> dict:
         return {

@@ -147,6 +147,13 @@ class CoeffEstimate:
     def confident(self, rel_tol: float) -> bool:
         return self.n >= 2 and self.max_rel_se() <= rel_tol
 
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Mapping) -> "CoeffEstimate":
+        return CoeffEstimate(**dict(d))
+
 
 def fit_phase_coeffs(X: np.ndarray, y: np.ndarray, *, quad_index: int,
                      ridge: float = 1e-3,
@@ -227,6 +234,23 @@ class RecursiveFit:
     def coeffs(self) -> np.ndarray:
         return self.theta.copy()
 
+    def state_dict(self) -> dict:
+        """JSON-able dynamic state (checkpointing); hyperparameters are
+        construction-time and not included."""
+        return {
+            "theta": self.theta.tolist(),
+            "P": self.P.tolist(),
+            "n": self.n,
+            "scale": None if self._scale is None else self._scale.tolist(),
+        }
+
+    def load_state_dict(self, state: Mapping) -> None:
+        self.theta = np.asarray(state["theta"], dtype=np.float64)
+        self.P = np.asarray(state["P"], dtype=np.float64)
+        self.n = int(state["n"])
+        scale = state.get("scale")
+        self._scale = None if scale is None else np.asarray(scale, np.float64)
+
 
 # ---------------------------------------------------------------------------
 # Drift detection
@@ -281,6 +305,28 @@ class DriftDetector:
             self._reset()
             return True
         return False
+
+    def state_dict(self) -> dict:
+        """JSON-able dynamic state: reference window + CUSUM sums."""
+        return {
+            "events": self.events,
+            "ref": list(self._ref),
+            "mu": self._mu,
+            "sigma": self._sigma,
+            "armed": self._armed,
+            "s_pos": self.s_pos,
+            "s_neg": self.s_neg,
+        }
+
+    def load_state_dict(self, state: Mapping) -> None:
+        self._reset()
+        self.events = int(state["events"])
+        self._ref.extend(float(x) for x in state["ref"])
+        self._mu = float(state["mu"])
+        self._sigma = float(state["sigma"])
+        self._armed = bool(state["armed"])
+        self.s_pos = float(state["s_pos"])
+        self.s_neg = float(state["s_neg"])
 
 
 # ---------------------------------------------------------------------------
@@ -393,6 +439,38 @@ class PhaseCalibrator:
         if est.n >= self.min_samples and est.confident(self.rel_tol):
             self._confident = est
             self._stale = False
+
+    # -- checkpointing --------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able dynamic state: sample window, fit, CUSUM buffers."""
+        return {
+            "X": [row.tolist() for row in self._X],
+            "y": list(self._y),
+            "since_refit": self._since_refit,
+            "estimate": None if self._estimate is None
+            else self._estimate.to_json(),
+            "confident": None if self._confident is None
+            else self._confident.to_json(),
+            "stale": self._stale,
+            "n_observed": self.n_observed,
+            "drift_events": self.drift_events,
+            "detector": self.detector.state_dict(),
+        }
+
+    def load_state_dict(self, state: Mapping) -> None:
+        self._X.clear()
+        self._y.clear()
+        self._X.extend(np.asarray(r, np.float64) for r in state["X"])
+        self._y.extend(float(t) for t in state["y"])
+        self._since_refit = int(state["since_refit"])
+        est, conf = state.get("estimate"), state.get("confident")
+        self._estimate = None if est is None else CoeffEstimate.from_json(est)
+        self._confident = (None if conf is None
+                           else CoeffEstimate.from_json(conf))
+        self._stale = bool(state["stale"])
+        self.n_observed = int(state["n_observed"])
+        self.drift_events = int(state["drift_events"])
+        self.detector.load_state_dict(state["detector"])
 
 
 # ---------------------------------------------------------------------------
@@ -525,3 +603,35 @@ class ServingCalibrator:
         if len(self._dec) < self.min_samples:
             return None
         return float(self._dec_cost / self._coeffs[0])
+
+    # -- checkpointing --------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able dynamic state of the serving fit."""
+        return {
+            "rows": [row.tolist() for row in self._rows],
+            "t": list(self._t),
+            "since_refit": self._since_refit,
+            "dec": [list(x) for x in self._dec],
+            "coeffs": None if self._coeffs is None else self._coeffs.tolist(),
+            "coeffs_se": (None if self._coeffs_se is None
+                          else self._coeffs_se.tolist()),
+            "dec_cost": self._dec_cost,
+            "drift_events": self.drift_events,
+            "detector": self.detector.state_dict(),
+        }
+
+    def load_state_dict(self, state: Mapping) -> None:
+        self._rows.clear()
+        self._t.clear()
+        self._dec.clear()
+        self._rows.extend(np.asarray(r, np.float64) for r in state["rows"])
+        self._t.extend(float(t) for t in state["t"])
+        self._dec.extend((float(b), float(t)) for b, t in state["dec"])
+        c, se = state.get("coeffs"), state.get("coeffs_se")
+        self._coeffs = None if c is None else np.asarray(c, np.float64)
+        self._coeffs_se = None if se is None else np.asarray(se, np.float64)
+        dc = state.get("dec_cost")
+        self._dec_cost = None if dc is None else float(dc)
+        self._since_refit = int(state["since_refit"])
+        self.drift_events = int(state["drift_events"])
+        self.detector.load_state_dict(state["detector"])

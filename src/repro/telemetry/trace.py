@@ -32,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import threading
-from typing import Iterable, Sequence
+from typing import Iterable
 
 import numpy as np
 

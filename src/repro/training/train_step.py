@@ -7,9 +7,6 @@ composed all-to-all) between encoder phases and the LLM backbone.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -18,7 +15,46 @@ from repro.core.communicator import apply_comm_plan
 from repro.models.model import forward
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 
-__all__ = ["make_exchange", "make_loss_fn", "make_train_step", "make_prefill_step"]
+__all__ = [
+    "check_opt_state",
+    "make_exchange",
+    "make_loss_fn",
+    "make_train_step",
+    "make_prefill_step",
+]
+
+# The optimizer-state contract ``make_train_step`` / ``adamw_update``
+# expect -- and what a checkpoint must therefore carry.  Kept next to
+# the step factory so the contract and its consumer move together.
+OPT_STATE_KEYS = ("mu", "nu", "step")
+
+
+def check_opt_state(params, opt_state) -> None:
+    """Validate a (restored) optimizer state against the train-step
+    contract: ``{"mu", "nu", "step"}`` with both moment trees congruent
+    with ``params`` (same treedef, same leaf shapes) and a scalar step.
+
+    Raises ``ValueError`` with the first violation -- this is what
+    ``repro.checkpoint.state`` runs on every restore, so a checkpoint
+    from an incompatible architecture fails loudly instead of crashing
+    deep inside the jitted update."""
+    if not isinstance(opt_state, dict) or set(opt_state) != set(OPT_STATE_KEYS):
+        got = sorted(opt_state) if isinstance(opt_state, dict) else type(opt_state)
+        raise ValueError(f"opt_state must have keys {OPT_STATE_KEYS}, got {got}")
+    p_leaves, p_def = jax.tree_util.tree_flatten(params)
+    for moment in ("mu", "nu"):
+        m_leaves, m_def = jax.tree_util.tree_flatten(opt_state[moment])
+        if m_def != p_def:
+            raise ValueError(
+                f"opt_state[{moment!r}] tree structure does not match params")
+        for pl, ml in zip(p_leaves, m_leaves):
+            if tuple(pl.shape) != tuple(ml.shape):
+                raise ValueError(
+                    f"opt_state[{moment!r}] leaf shape {tuple(ml.shape)} != "
+                    f"params leaf shape {tuple(pl.shape)}")
+    step = jnp.asarray(opt_state["step"])
+    if step.ndim != 0:
+        raise ValueError(f"opt_state['step'] must be a scalar, got {step.shape}")
 
 
 def make_exchange(cfg: ModelConfig, mesh, dp_axes, *, mode: str = "a2a"):

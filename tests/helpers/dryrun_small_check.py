@@ -9,9 +9,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 
 import jax
-import numpy as np
 
-from repro.configs import INPUT_SHAPES, get_config, input_specs, step_kind
+from repro.configs import get_config
 from repro.launch.roofline import collective_bytes
 from repro.sharding.specs import (
     batch_specs,

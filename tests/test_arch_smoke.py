@@ -13,7 +13,7 @@ import pytest
 
 from repro.configs import ARCHITECTURES, get_config
 from repro.core.orchestrator import MLLMGlobalOrchestrator
-from repro.data.synthetic import Example, sample_examples
+from repro.data.synthetic import Example
 from repro.serving.serve_step import init_cache, make_serve_step
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_step import init_train_state, make_train_step

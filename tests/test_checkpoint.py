@@ -1,0 +1,556 @@
+"""Checkpoint subsystem tests (ISSUE 5).
+
+Acceptance invariants:
+  * save at step k, resume at the SAME DP degree -> the continued loss
+    trajectory is bitwise identical to an uninterrupted run (>= 3 steps,
+    mllm_10b);
+  * elastic restore (DP 4 -> 2 and 2 -> 4) matches within numerical
+    tolerance, with post-balancing re-solved for the new shard count;
+  * crash consistency: a kill mid-save (``.tmp`` litter) or a truncated
+    leaf shard never corrupts a restore -- the manager falls back to the
+    last complete checkpoint and flags the damaged one;
+  * serving ``Engine.snapshot()/restore()`` and ``MultiReplicaEngine.
+    handoff`` preserve greedy output streams exactly (KV pages are
+    recomputed through the preemption-recompute path).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointCorruptError,
+    CheckpointManager,
+    DataCursor,
+    ElasticResumeError,
+    TrainState,
+    elastic_cursor,
+    load_pytree,
+    meta_to_spec,
+    restore_train_state,
+    save_pytree,
+    save_train_state,
+)
+from repro.configs import EngineConfig, get_config
+from repro.core.cost_model import CostModel
+from repro.core.orchestrator import MLLMGlobalOrchestrator
+from repro.data.pipeline import PrefetchingLoader
+from repro.data.synthetic import Example
+from repro.models.model import init_params
+from repro.serving.engine import Engine, MultiReplicaEngine, Request
+from repro.telemetry import AdaptiveOrchestration
+from repro.telemetry.calibrate import PhaseCalibrator
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import (
+    check_opt_state,
+    init_train_state,
+    make_train_step,
+)
+
+
+# ----------------------------------------------------------------------
+# Store: roundtrip, atomicity, retention, corruption fallback.
+# ----------------------------------------------------------------------
+def _demo_tree():
+    return {
+        "params": {
+            "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "layers": [np.ones((2, 2), np.float64), np.zeros(3, np.int32)],
+            "pair": (np.full(2, 7, np.int64), np.float32(1.5)),
+        },
+        "step": np.int32(3),
+    }
+
+
+def _assert_tree_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_store_roundtrip_structure_dtypes_specs(tmp_path):
+    from jax.sharding import PartitionSpec as P
+
+    tree = _demo_tree()
+    specs = {"params": {"w": P("data", None)}}
+    path = save_pytree(str(tmp_path / "ck"), tree, specs=specs,
+                       extras={"cursor": {"seed": 7}}, meta={"step": 3})
+    out, manifest = load_pytree(path)
+    _assert_tree_equal(tree, out)
+    # structure kinds survive (tuple stays tuple, list stays list)
+    assert isinstance(out["params"]["pair"], tuple)
+    assert isinstance(out["params"]["layers"], list)
+    assert manifest["extras"]["cursor"]["seed"] == 7
+    rows = {r["path"]: r for r in manifest["leaves"]}
+    assert rows["params/w"]["spec"] == ["data", None]
+    assert rows["params/layers/0"]["spec"] is None
+    for r in rows.values():  # content hashes recorded per shard
+        assert len(r["sha256"]) == 64
+
+
+def test_store_bfloat16_leaves(tmp_path):
+    import ml_dtypes
+
+    tree = {"w": np.arange(8, dtype=ml_dtypes.bfloat16).reshape(2, 4)}
+    path = save_pytree(str(tmp_path / "ck"), tree)
+    out, _ = load_pytree(path)
+    assert out["w"].dtype == ml_dtypes.bfloat16
+    assert np.array_equal(out["w"].astype(np.float32),
+                          tree["w"].astype(np.float32))
+
+
+def test_atomic_commit_leaves_no_tmp(tmp_path):
+    save_pytree(str(tmp_path / "ck"), _demo_tree())
+    assert sorted(os.listdir(tmp_path)) == ["ck"]
+
+
+def test_manager_retention_keep_last(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _demo_tree())
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_crash_mid_save_tmp_litter_is_ignored_and_collected(tmp_path):
+    """Kill mid-save: an uncommitted ``.tmp`` directory must neither be
+    restored nor block the next save."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=3)
+    mgr.save(1, _demo_tree())
+    # simulate a writer that died before the atomic rename
+    litter = tmp_path / "step_000002.tmp"
+    litter.mkdir()
+    (litter / "leaf_00000_w.npy").write_bytes(b"partial garbage")
+    assert mgr.steps() == [1]
+    tree, manifest = mgr.restore_latest()
+    assert manifest["step"] == 1
+    mgr.save(3, _demo_tree())  # next save collects the litter
+    assert not litter.exists()
+
+
+def test_truncated_leaf_falls_back_and_flags(tmp_path):
+    """Crash-consistency satellite: restore falls back to the last
+    complete checkpoint and flags the corrupt one."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=3)
+    mgr.save(1, _demo_tree())
+    mgr.save(2, _demo_tree())
+    newest = mgr.step_path(2)
+    shard = next(f for f in sorted(os.listdir(newest)) if f.endswith(".npy"))
+    with open(os.path.join(newest, shard), "r+b") as f:
+        f.truncate(8)  # torn write
+    tree, manifest = mgr.restore_latest()
+    assert manifest["step"] == 1  # fell back
+    flagged = mgr.corrupt_paths()
+    assert len(flagged) == 1 and flagged[0].endswith("step_000002.corrupt")
+    assert mgr.steps() == [1]  # the flagged one no longer restorable
+
+
+def test_direct_load_of_truncated_checkpoint_raises(tmp_path):
+    path = save_pytree(str(tmp_path / "ck"), _demo_tree())
+    shard = next(f for f in sorted(os.listdir(path)) if f.endswith(".npy"))
+    with open(os.path.join(path, shard), "r+b") as f:
+        f.truncate(4)
+    with pytest.raises(CheckpointCorruptError):
+        load_pytree(path)
+
+
+def test_missing_manifest_is_corrupt(tmp_path):
+    path = save_pytree(str(tmp_path / "ck"), _demo_tree())
+    os.remove(os.path.join(path, "manifest.json"))
+    with pytest.raises(CheckpointCorruptError):
+        load_pytree(path)
+
+
+def test_restore_latest_none_when_empty(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.restore_latest() is None
+    assert restore_train_state(mgr) is None
+
+
+# ----------------------------------------------------------------------
+# Train-state contract + cursor.
+# ----------------------------------------------------------------------
+def test_check_opt_state_contract():
+    params = {"w": jnp.ones((2, 3)), "b": jnp.zeros(3)}
+    good = {"mu": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "nu": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.int32(0)}
+    check_opt_state(params, good)
+    with pytest.raises(ValueError, match="keys"):
+        check_opt_state(params, {"mu": good["mu"]})
+    with pytest.raises(ValueError, match="structure"):
+        check_opt_state(params, {**good, "mu": {"w": good["mu"]["w"]}})
+    with pytest.raises(ValueError, match="shape"):
+        check_opt_state(params, {**good, "nu": {
+            "w": jnp.zeros((9, 9)), "b": jnp.zeros(3)}})
+    with pytest.raises(ValueError, match="scalar"):
+        check_opt_state(params, {**good, "step": jnp.zeros(4)})
+
+
+def test_elastic_cursor_resplit_and_errors():
+    c = DataCursor(seed=1, batch_index=5, examples_per_instance=2, d=4)
+    e = elastic_cursor(c, 2)
+    assert (e.d, e.examples_per_instance) == (2, 4)
+    assert e.total_examples == c.total_examples
+    assert e.batch_index == 5 and e.seed == 1
+    assert elastic_cursor(c, 4) is c
+    with pytest.raises(ElasticResumeError):
+        elastic_cursor(c, 3)  # 8 examples don't split across 3
+    with pytest.raises(ElasticResumeError):
+        elastic_cursor(c, 0)
+
+
+def test_reshard_pytree_matches_manifest_paths(tmp_path):
+    """Resharding must be applied to the tree AS SAVED: manifest leaf
+    paths carry the full prefix ('params/w'), so the specs only attach
+    when the restored root tree is resharded, not a subtree."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.checkpoint import reshard_pytree
+
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"params": {"w": np.ones((4, 2), np.float32)},
+            "opt_state": {"mu": {"w": np.zeros((4, 2), np.float32)}}}
+    specs = {"params": {"w": P("data", None)},
+             "opt_state": {"mu": {"w": P("data", None)}}}
+    path = save_pytree(str(tmp_path / "ck"), tree, specs=specs)
+    out, manifest = load_pytree(path)
+    resharded = reshard_pytree(out, manifest, mesh)
+    assert resharded["params"]["w"].sharding.spec == P("data")
+    assert resharded["opt_state"]["mu"]["w"].sharding.spec == P("data")
+
+
+def test_repeat_corruption_flags_do_not_collide(tmp_path):
+    """A step can be re-saved after its corrupt predecessor was flagged;
+    a second flag of the same step must not abort the fallback walk."""
+
+    def corrupt_newest(mgr):
+        newest = mgr.step_path(mgr.latest_step())
+        shard = next(f for f in sorted(os.listdir(newest))
+                     if f.endswith(".npy"))
+        with open(os.path.join(newest, shard), "r+b") as f:
+            f.truncate(8)
+
+    mgr = CheckpointManager(str(tmp_path), keep_last=4)
+    mgr.save(1, _demo_tree())
+    mgr.save(2, _demo_tree())
+    corrupt_newest(mgr)
+    _, manifest = mgr.restore_latest()
+    assert manifest["step"] == 1
+    mgr.save(2, _demo_tree())  # re-save the flagged step...
+    corrupt_newest(mgr)  # ...and corrupt it again
+    _, manifest = mgr.restore_latest()  # must not raise OSError
+    assert manifest["step"] == 1
+    assert len(mgr.corrupt_paths()) == 2
+
+
+def test_meta_to_spec_divisibility_fallback():
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("data",))
+    # axis present + divisible -> kept; unknown axis -> dropped
+    assert meta_to_spec(["data", None], (4, 2), mesh) == P("data")
+    assert meta_to_spec(["model"], (4,), mesh) == P()
+    assert meta_to_spec(None, (4,), mesh) == P()
+    assert meta_to_spec(["data"], (3,), jax.make_mesh((1,), ("data",))) == P("data")
+
+
+# ----------------------------------------------------------------------
+# Data pipeline: deterministic replay from the cursor.
+# ----------------------------------------------------------------------
+def _small_sampler(rng, per):
+    out = []
+    for _ in range(per):
+        text = int(rng.integers(16, 64))
+        vis = int(rng.integers(1, 3)) * 16
+        aud = int(rng.integers(16, 32))
+        out.append(Example("mix", text, vis, aud, ("vision", "audio", "text")))
+    return out
+
+
+def _mk_loader(cfg, d, per, *, start=0, seed=11):
+    orch = MLLMGlobalOrchestrator(cfg, d, vocab=cfg.vocab_size)
+    probe = [_small_sampler(np.random.default_rng(s), per) for s in range(d)]
+    caps = orch.default_capacities(probe, margin=4.0)
+    loader = PrefetchingLoader(orch, caps, examples_per_instance=per,
+                               seed=seed, sampler=_small_sampler,
+                               start_index=start)
+    return loader, orch
+
+
+def test_loader_replay_from_cursor_is_bitwise():
+    cfg = get_config("mllm_10b").smoke()
+    la, _ = _mk_loader(cfg, 2, 3)
+    full = [next(la)[0] for _ in range(4)]
+    cursor_after_2 = None
+    la.close()
+    lb, _ = _mk_loader(cfg, 2, 3)
+    for _ in range(2):
+        next(lb)
+    cursor_after_2 = lb.cursor
+    lb.close()
+    assert cursor_after_2 == 2
+    lc, _ = _mk_loader(cfg, 2, 3, start=cursor_after_2)
+    resumed = [next(lc)[0] for _ in range(2)]
+    lc.close()
+    for a, b in zip(full[2:], resumed):
+        assert set(a) == set(b)
+        for k in a:
+            assert np.array_equal(a[k], b[k]), k
+
+
+def test_loader_global_stream_invariant_under_dp_resplit():
+    """The same (seed, index) yields the same global example multiset
+    whether split 2x6 or 4x3 -- the elastic-resume data invariant."""
+    cfg = get_config("mllm_10b").smoke()
+    la, _ = _mk_loader(cfg, 2, 6)
+    lb, _ = _mk_loader(cfg, 4, 3)
+    ba = next(la)[0]
+    bb = next(lb)[0]
+    la.close()
+    lb.close()
+
+    def seg_sizes(batch):
+        seg = batch["llm_seg"]
+        return sorted(np.bincount(seg[seg > 0]).tolist())
+
+    assert seg_sizes(ba) == seg_sizes(bb)
+
+
+# ----------------------------------------------------------------------
+# Telemetry calibrator state survives a restart.
+# ----------------------------------------------------------------------
+def _feed(cal, rng, n, alpha=2.0, beta=0.01):
+    for _ in range(n):
+        lens = rng.integers(10, 200, size=8)
+        f = CostModel().feature_vector(lens)
+        t = alpha * f[0] + beta * f[2] + rng.normal(0, 0.1)
+        cal.observe(f, max(t, 0.1))
+
+
+def test_phase_calibrator_state_roundtrip():
+    rng = np.random.default_rng(0)
+    a = PhaseCalibrator(CostModel(alpha=1.0, beta=0.0))
+    _feed(a, rng, 40)
+    b = PhaseCalibrator(CostModel(alpha=1.0, beta=0.0))
+    b.load_state_dict(json.loads(json.dumps(a.state_dict())))
+    assert b.calibrated == a.calibrated
+    assert b.n_observed == a.n_observed
+    ca, cb = a.cost_model(), b.cost_model()
+    assert (ca.alpha, ca.beta) == (cb.alpha, cb.beta)
+    # continued observation behaves identically
+    rng_a, rng_b = np.random.default_rng(1), np.random.default_rng(1)
+    _feed(a, rng_a, 8)
+    _feed(b, rng_b, 8)
+    ca, cb = a.cost_model(), b.cost_model()
+    assert (ca.alpha, ca.beta) == (cb.alpha, cb.beta)
+
+
+def test_adaptive_orchestration_state_roundtrip():
+    cfg = get_config("mllm_10b").smoke()
+    rng = np.random.default_rng(0)
+    a = AdaptiveOrchestration(cfg)
+    for phase, m in a.models.items():
+        _feed(m.calibrator, rng, 30)
+    snap = json.loads(json.dumps(a.state_dict()))
+    b = AdaptiveOrchestration(cfg)
+    b.load_state_dict(snap)
+    assert b.version == a.version or b.version >= 0
+    for phase in a.models:
+        ma, mb = a.cost_model(phase), b.cost_model(phase)
+        assert (ma.alpha, ma.beta) == (mb.alpha, mb.beta)
+        assert a.models[phase].calibrator.calibrated == \
+            b.models[phase].calibrator.calibrated
+
+
+# ----------------------------------------------------------------------
+# Acceptance: bitwise resume + elastic restore on mllm_10b.
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+def test_train_resume_bitwise_and_elastic(tmp_path):
+    cfg = get_config("mllm_10b").smoke()
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3)))
+
+    def run(d, per, steps, params=None, opt=None, start=0):
+        if params is None:
+            params, opt = init_train_state(cfg, jax.random.PRNGKey(0))
+        loader, orch = _mk_loader(cfg, d, per, start=start)
+        losses, reports = [], []
+        try:
+            for _ in range(start, steps):
+                batch_np, report, _ = next(loader)
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                params, opt, m = step_fn(params, opt, batch)
+                losses.append(float(m["loss"]))
+                reports.append(report)
+        finally:
+            loader.close()
+        return losses, params, opt, reports
+
+    # Uninterrupted reference at DP 4.
+    full, _, _, _ = run(4, 2, 5)
+    # Interrupted: 2 steps, checkpoint, restore, continue 3 more.
+    prefix, p2, o2, _ = run(4, 2, 2)
+    assert prefix == full[:2]
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    save_train_state(mgr, TrainState(
+        params=jax.device_get(p2), opt_state=jax.device_get(o2), step=2,
+        cursor=DataCursor(seed=11, batch_index=2,
+                          examples_per_instance=2, d=4)))
+    st, _ = restore_train_state(mgr)
+    assert st.step == 2 and st.cursor.d == 4
+    cont, _, _, _ = run(st.cursor.d, st.cursor.examples_per_instance, 5,
+                        params=st.params, opt=st.opt_state, start=st.step)
+    # >= 3 steps bitwise identical to the uninterrupted trajectory.
+    assert len(cont) == 3
+    assert cont == full[2:]
+
+    # Elastic restore DP 4 -> 2: same trajectory within tolerance,
+    # post-balancing re-solved for the new shard count.
+    ec = elastic_cursor(st.cursor, 2)
+    el, p_el, o_el, reps = run(ec.d, ec.examples_per_instance, 5,
+                               params=st.params, opt=st.opt_state,
+                               start=st.step)
+    assert all(r.phase_costs["llm"].shape == (2,) for r in reps)
+    np.testing.assert_allclose(el, full[2:], rtol=2e-3)
+
+    # Elastic back up DP 2 -> 4 from a checkpoint written at DP 2.
+    save_train_state(mgr, TrainState(
+        params=jax.device_get(p_el), opt_state=jax.device_get(o_el), step=5,
+        cursor=DataCursor(seed=11, batch_index=5,
+                          examples_per_instance=4, d=2)))
+    st2, _ = restore_train_state(mgr)
+    ec2 = elastic_cursor(st2.cursor, 4)
+    assert (ec2.d, ec2.examples_per_instance) == (4, 2)
+    el2, _, _, reps2 = run(ec2.d, ec2.examples_per_instance, 7,
+                           params=st2.params, opt=st2.opt_state, start=5)
+    assert all(r.phase_costs["llm"].shape == (4,) for r in reps2)
+    # Continue the DP-4 reference two more steps for comparison.
+    full7, _, _, _ = run(4, 2, 7)
+    np.testing.assert_allclose(el2, full7[5:], rtol=5e-3)
+
+
+# ----------------------------------------------------------------------
+# Serving engine snapshot / restore / handoff.
+# ----------------------------------------------------------------------
+def _serve_setup(n_requests=5, seed=0):
+    cfg = get_config("olmo_1b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(block_size=16, num_blocks=17, max_num_seqs=3,
+                        token_budget=64, max_model_len=64,
+                        prefill_pad=16, decode_pad=2)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        L = int(rng.integers(3, 24))
+        reqs.append(Request(
+            req_id=i,
+            prompt=rng.integers(1, cfg.vocab_size, L).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 7)),
+            arrival_step=i // 2))
+    return cfg, ecfg, params, reqs
+
+
+def _streams(engine_like):
+    if isinstance(engine_like, MultiReplicaEngine):
+        reqs = [r for e in engine_like.engines for r in e.requests]
+    else:
+        reqs = engine_like.requests
+    return {r.req_id: list(r.output_tokens) for r in reqs}
+
+
+def test_engine_snapshot_restore_streams_exact():
+    cfg, ecfg, params, reqs = _serve_setup()
+    # Reference: run to completion uninterrupted.
+    ref = Engine(cfg, ecfg, params)
+    ref.run([Request.from_state_dict(r.to_state_dict()) for r in reqs],
+            max_steps=300)
+    # Interrupted: a few steps, snapshot, restore into a fresh engine.
+    a = Engine(cfg, ecfg, params)
+    pending = sorted(reqs, key=lambda r: (r.arrival_step, r.req_id))
+    for _ in range(4):
+        while pending and pending[0].arrival_step <= a.n_steps:
+            a.submit(pending.pop(0))
+        a.step()
+    snap = json.loads(json.dumps(a.snapshot()))  # JSON-able end to end
+    b = Engine(cfg, ecfg, params)
+    b.restore(snap)
+    assert b.n_steps == a.n_steps
+    assert len(b.step_timings) == len(a.step_timings)
+    # KV pool starts empty: pages are recomputed, not copied.
+    assert b.pool.occupancy == 0.0
+    while pending or b.has_work:
+        while pending and pending[0].arrival_step <= b.n_steps:
+            b.submit(pending.pop(0))
+        b.step()
+        assert b.n_steps < 300
+    b.pool.check()
+    assert _streams(b) == _streams(ref)
+
+
+def test_multi_replica_handoff_streams_exact():
+    cfg, ecfg, params, reqs = _serve_setup(n_requests=6, seed=1)
+    ecfg2 = EngineConfig(**{**ecfg.__dict__, "replicas": 2})
+
+    def clone():
+        return [Request.from_state_dict(r.to_state_dict()) for r in reqs]
+
+    ref = MultiReplicaEngine(cfg, ecfg2, params)
+    ref.run(clone(), max_steps=300)
+
+    m = MultiReplicaEngine(cfg, ecfg2, params)
+    pending = sorted(clone(), key=lambda r: (r.arrival_step, r.req_id))
+    clock = 0
+    for _ in range(3):
+        burst = []
+        while pending and pending[0].arrival_step <= clock:
+            burst.append(pending.pop(0))
+        if burst:
+            m.submit_batch(burst)
+        m.step()
+        clock += 1
+    # Replica 0 drains; its in-flight work moves through the shared
+    # snapshot/restore + preemption-recompute path.
+    moved = m.handoff(0, 1)
+    assert not m.engines[0].waiting and not m.engines[0].running
+    assert m.engines[0].pool.occupancy == 0.0
+    while pending or m.has_work:
+        burst = []
+        while pending and pending[0].arrival_step <= clock:
+            burst.append(pending.pop(0))
+        if burst:
+            # post-handoff arrivals go to the surviving replica
+            for r in burst:
+                m.engines[1].submit(r)
+        m.step()
+        clock += 1
+        assert clock < 300
+    assert moved >= 0
+    for e in m.engines:
+        e.pool.check()
+    assert _streams(m) == _streams(ref)
+
+
+def test_handoff_routes_through_preempt_transition():
+    """The handoff path must use the state machine's preempt transition
+    (shared with scheduler eviction), not ad-hoc field surgery."""
+    cfg, ecfg, params, reqs = _serve_setup(n_requests=3, seed=2)
+    a = Engine(cfg, ecfg, params)
+    for r in reqs:
+        r.arrival_step = 0
+        a.submit(r)
+    for _ in range(3):
+        a.step()
+    decoding = [s.request for s in a.running]
+    before = {r.req_id: r.n_preemptions for r in decoding}
+    moved = a.export_unfinished()
+    moved_ids = {d["req_id"] for d in moved}
+    for r in decoding:
+        assert r.req_id in moved_ids
+        assert r.n_preemptions == before[r.req_id] + 1

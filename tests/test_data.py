@@ -10,7 +10,6 @@ from repro.core.orchestrator import MLLMGlobalOrchestrator
 from repro.data.packing import pack_padded_stream, pack_stream
 from repro.data.pipeline import PrefetchingLoader
 from repro.data.synthetic import (
-    TaskMix,
     modality_ratio_stats,
     sample_examples,
 )

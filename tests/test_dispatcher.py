@@ -1,6 +1,5 @@
 """Dispatcher-level tests (paper S5 plumbing)."""
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -2,8 +2,6 @@
 dense-cache serve_step path, scheduler invariants (budget, FIFO, no
 starvation, preemption recompute), post-balanced replica assignment, and
 the pluggable sampling satellite."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +14,6 @@ from repro.serving.engine import (
     Engine,
     MultiReplicaEngine,
     Request,
-    RequestState,
     assign_replicas,
     serving_cost_model,
 )

@@ -149,7 +149,6 @@ def test_windowed_flash_variant_matches_reference():
 def test_packed_stream_skips_tiles_vs_dense_grid():
     """Acceptance: block-skipping visits strictly fewer KV tiles than the
     dense grid on a multi-segment packed stream."""
-    rng = np.random.default_rng(5)
     cap = 512
     lens = [np.asarray([70, 90, 50, 64, 80, 60], np.int64)]
     seg, pos, _ = pack_stream(lens, cap)

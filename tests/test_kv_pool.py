@@ -1,8 +1,6 @@
 """Paged KV pool tests: allocator invariants (never double-books a
 block across alloc/free/defrag) and paged-decode exactness (block-table
 gather decode == dense-cache decode, bitwise)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,5 +1,4 @@
 """Roofline extraction tests: HLO collective parsing + term analysis."""
-import numpy as np
 import pytest
 
 from repro.launch.roofline import HW, analyze, collective_bytes
