@@ -22,6 +22,13 @@ Metrics and their bands:
   calibration  recovered_fraction              seeded simulation: medium
                                                band; within_5pct flag
                                                must hold
+  kernels      moe_dropfree_flop_ratio         seeded routing + live-tile
+                                               accounting: tight band
+               ssm_state_traffic_ratio         analytic bytes: tight band
+               autotune_best_speedup           within-run wall ratio, >= 1
+                                               by construction: abs floor
+                                               only; kernel parity flags
+                                               must hold
 
 Usage:
     python -m benchmarks.check_regression --fresh-dir /tmp
@@ -83,6 +90,18 @@ METRICS = [
     Metric("BENCH_calibration", "recovered_fraction",
            lambda d: float(d["recovered_fraction"]),
            rel_tol=0.2, abs_floor=0.8),
+    Metric("BENCH_kernels", "moe_dropfree_flop_ratio",
+           lambda d: float(d["headline"]["moe_dropfree_flop_ratio"]),
+           rel_tol=0.1, abs_floor=1.1),
+    Metric("BENCH_kernels", "ssm_state_traffic_ratio",
+           lambda d: float(d["headline"]["ssm_state_traffic_ratio"]),
+           rel_tol=0.1, abs_floor=2.0),
+    # Wall-time ratio (noisy on shared runners), but the default block
+    # shape is inside the sweep so the winner can never be slower:
+    # gate only on the >= 1.0 invariant.
+    Metric("BENCH_kernels", "autotune_best_speedup",
+           lambda d: float(d["headline"]["autotune_best_speedup"]),
+           rel_tol=1.0, abs_floor=1.0),
 ]
 
 FLAGS = [
@@ -92,6 +111,14 @@ FLAGS = [
          lambda d: bool(d["within_5pct_of_oracle"])),
     Flag("BENCH_dispatch", "max_cost_match",
          lambda d: all(r["max_cost_match"] for r in d["rows"])),
+    Flag("BENCH_kernels", "moe_grouped_dense_parity",
+         lambda d: all(r["parity_max_err"] < 1e-4
+                       and r["grad_parity_max_err"] < 1e-4
+                       for r in d["moe"])),
+    Flag("BENCH_kernels", "ssm_pallas_scan_parity",
+         lambda d: all(r["parity_max_err"] < 1e-4
+                       and r["grad_parity_max_err"] < 1e-4
+                       for r in d["ssm"])),
 ]
 
 

@@ -62,6 +62,13 @@ class ModelConfig:
     n_experts: int = 0
     experts_per_token: int = 0
     capacity_factor: float = 1.25
+    # Expert dispatch backend: "dense" = legacy [E, capacity, d] buffer
+    # (static shapes, drops past capacity); "grouped" = drop-free sorted
+    # dispatch through the Pallas grouped-GEMM kernel
+    # (kernels/grouped_gemm.py, tile-skip over empty experts).
+    moe_backend: Literal["dense", "grouped"] = "dense"
+    moe_block_m: int = 128
+    moe_block_n: int = 128
 
     # SSM (mamba).
     ssm_variant: Literal["mamba1", "mamba2", None] = None
@@ -69,6 +76,12 @@ class ModelConfig:
     ssm_expand: int = 2
     ssm_conv: int = 4
     ssm_headdim: int = 64  # mamba2
+    # Selective-scan backend: "scan" = chunked lax.scan recurrence;
+    # "pallas" = the fused kernel (kernels/selective_scan.py) with its
+    # chunk-checkpointed custom VJP.
+    ssm_backend: Literal["scan", "pallas"] = "scan"
+    ssm_block_d: int = 128
+    ssm_chunk: int = 64
 
     # Hybrid (zamba2): a shared attention block every `shared_attn_every`
     # SSM layers, reusing ONE set of attention weights each time.
@@ -110,6 +123,11 @@ class ModelConfig:
     # Layer-scan unroll factor; the dry-run compiles at 1 and 2 (3 for
     # hybrids) and extrapolates exact per-layer FLOPs/bytes/collectives.
     scan_unroll: int = 1
+    # Consult the kernel autotune cache (kernels/autotune.py) at trace
+    # time: tuned block shapes override block_q/block_kv, moe_block_*,
+    # ssm_block_d/ssm_chunk when a cache entry matches the call shape.
+    kernel_autotune: bool = False
+    autotune_cache: str | None = None  # path; None = default location
     citation: str = ""
 
     # ------------------------------------------------------------------

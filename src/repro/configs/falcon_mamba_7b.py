@@ -14,5 +14,7 @@ CONFIG = ModelConfig(
     ssm_state=16,
     ssm_expand=2,
     ssm_conv=4,
+    # Fused Pallas selective scan (kernels/selective_scan.py).
+    ssm_backend="pallas",
     citation="arXiv:2410.05355",
 )

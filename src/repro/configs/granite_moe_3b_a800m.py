@@ -17,5 +17,8 @@ CONFIG = ModelConfig(
     vocab_size=49155,
     n_experts=40,
     experts_per_token=8,
+    # 40 small experts, top-8: the imbalance-sensitive case the
+    # grouped-GEMM backend exists for.
+    moe_backend="grouped",
     citation="hf:ibm-granite/granite-3.0-1b-a400m-base",
 )

@@ -12,5 +12,7 @@ CONFIG = ModelConfig(
     vocab_size=131072,
     n_experts=8,
     experts_per_token=2,
+    # Drop-free grouped-GEMM expert dispatch (kernels/grouped_gemm.py).
+    moe_backend="grouped",
     citation="hf:xai-org/grok-1",
 )

@@ -18,6 +18,8 @@ CONFIG = ModelConfig(
     ssm_expand=2,
     ssm_conv=4,
     ssm_headdim=64,
+    # Mamba-2 maps onto the mamba1 Pallas kernel by head broadcast.
+    ssm_backend="pallas",
     shared_attn_every=6,
     citation="arXiv:2411.15242",
 )

@@ -1,0 +1,218 @@
+"""Grouped GEMM for MoE expert dispatch, Pallas TPU kernel.
+
+Computes ``out[s] = x[s] @ w[e]`` for every row ``s`` in expert ``e``'s
+contiguous token group -- the megablocks-style layout where tokens are
+pre-sorted by expert so each expert owns one variable-length row range
+``[offsets[e], offsets[e+1])`` of ``x``.  Dispatching through a dense
+``[E, capacity, d]`` buffer (the legacy ``moe_ffn`` path) pays
+``E * capacity`` rows of matmul no matter how imbalanced the routing is
+and silently drops overflow tokens; the grouped layout pays exactly the
+routed rows, aligned up to the tile size, and drops nothing.
+
+Two kernels:
+
+  _gmm   out[M, N] = x[M, K] @ w[group(m), K, N]
+         grid (n_m, n_n, E), expert innermost.  Group offsets arrive via
+         scalar prefetch (SMEM) so the index maps and the tile-skip
+         predicate can read them before the tile body runs.  A
+         ``pl.when``-gated body (the flash kernel's live-tile pattern)
+         skips every (m-tile, expert) pair whose row ranges don't
+         intersect -- for E experts and roughly balanced routing only
+         ~1/E of the grid does MXU work.  Rows of a tile that belong to
+         a different (or no) expert are masked to zero before the dot.
+
+  _tgmm  dw[E, K, N] = sum over group(e) of x[s]^T dy[s]
+         grid (E, n_n, n_m), m innermost, accumulating [K, bn] in VMEM
+         scratch across the m sweep; dead (expert, m-tile) pairs skip.
+
+``grouped_matmul`` wraps both in a ``jax.custom_vjp``: dx reuses _gmm
+with the transposed weights, dw is one _tgmm call, and the integer
+offsets get a symbolic-zero (float0) cotangent like seg/pos in the
+flash kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["grouped_matmul", "count_live_group_tiles"]
+
+
+def _row_mask(tile_start, bm, start, end):
+    """[bm, 1] f32 mask of rows in [start, end)."""
+    rows = tile_start + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    return ((rows >= start) & (rows < end)).astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# Forward: out[M, N] = x @ w[expert-of-row].
+# ----------------------------------------------------------------------
+def _gmm_kernel(off_ref, x_ref, w_ref, o_ref, acc, *, bm, n_e):
+    e = pl.program_id(2)
+
+    @pl.when(e == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    tile_start = pl.program_id(0) * bm
+    start, end = off_ref[e], off_ref[e + 1]
+
+    @pl.when((start < tile_start + bm) & (end > tile_start))
+    def _body():
+        mask = _row_mask(tile_start, bm, start, end)
+        xm = x_ref[...].astype(jnp.float32) * mask
+        acc[...] += jax.lax.dot_general(
+            xm, w_ref[0].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(e == n_e - 1)
+    def _emit():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def _gmm(x, w, offsets, *, bm, bn, interpret):
+    M, K = x.shape
+    E, _, N = w.shape
+    n_m, n_n = M // bm, N // bn
+    kernel = functools.partial(_gmm_kernel, bm=bm, n_e=E)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_m, n_n, E),
+            in_specs=[
+                pl.BlockSpec((bm, K), lambda im, jn, e, off: (im, 0)),
+                pl.BlockSpec((1, K, bn), lambda im, jn, e, off: (e, 0, jn)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda im, jn, e, off: (im, jn)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(offsets, x, w)
+
+
+# ----------------------------------------------------------------------
+# Weight gradient: dw[e] = x[group(e)]^T @ dy[group(e)].
+# ----------------------------------------------------------------------
+def _tgmm_kernel(off_ref, x_ref, dy_ref, dw_ref, acc, *, bm, n_m):
+    im = pl.program_id(2)
+
+    @pl.when(im == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    tile_start = im * bm
+    e = pl.program_id(0)
+    start, end = off_ref[e], off_ref[e + 1]
+
+    @pl.when((start < tile_start + bm) & (end > tile_start))
+    def _body():
+        mask = _row_mask(tile_start, bm, start, end)
+        xm = x_ref[...].astype(jnp.float32) * mask
+        acc[...] += jax.lax.dot_general(
+            xm, dy_ref[...].astype(jnp.float32),
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(im == n_m - 1)
+    def _emit():
+        dw_ref[0] = acc[...].astype(dw_ref.dtype)
+
+
+def _tgmm(x, dy, offsets, E, *, bm, bn, interpret):
+    M, K = x.shape
+    N = dy.shape[1]
+    n_m, n_n = M // bm, N // bn
+    kernel = functools.partial(_tgmm_kernel, bm=bm, n_m=n_m)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(E, n_n, n_m),
+            in_specs=[
+                pl.BlockSpec((bm, K), lambda e, jn, im, off: (im, 0)),
+                pl.BlockSpec((bm, bn), lambda e, jn, im, off: (im, jn)),
+            ],
+            out_specs=pl.BlockSpec((1, K, bn), lambda e, jn, im, off: (e, 0, jn)),
+            scratch_shapes=[pltpu.VMEM((K, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, K, N), x.dtype),
+        interpret=interpret,
+    )(offsets, x, dy)
+
+
+# ----------------------------------------------------------------------
+# custom_vjp assembly.
+# ----------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _make_diff_gmm(bm, bn, interpret):
+    @jax.custom_vjp
+    def gmm(x, w, offsets):
+        return _gmm(x, w, offsets, bm=bm, bn=bn, interpret=interpret)
+
+    def fwd(x, w, offsets):
+        return gmm(x, w, offsets), (x, w, offsets)
+
+    def bwd(res, dy):
+        x, w, offsets = res
+        K = x.shape[1]
+        bk = next(b for b in range(min(bn, K), 0, -1) if K % b == 0)
+        dx = _gmm(dy, jnp.swapaxes(w, 1, 2), offsets,
+                  bm=bm, bn=bk, interpret=interpret)
+        dw = _tgmm(x, dy, offsets, w.shape[0], bm=bm, bn=bn,
+                   interpret=interpret)
+        return dx.astype(x.dtype), dw.astype(w.dtype), np.zeros(
+            offsets.shape, jax.dtypes.float0)
+
+    gmm.defvjp(fwd, bwd)
+    return gmm
+
+
+def grouped_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    group_offsets: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """x [M, K]; w [E, K, N]; group_offsets [E+1] int32 ascending with
+    ``group_offsets[0] == 0`` and ``group_offsets[E] <= M``.  Row ``s``
+    belongs to expert ``e`` iff ``offsets[e] <= s < offsets[e+1]``; rows
+    at or beyond ``offsets[E]`` (padding) produce zeros.  Returns
+    ``[M, N]`` in x.dtype (f32 accumulation).  Differentiable in x and w
+    (custom VJP through the transposed-_gmm / _tgmm kernels)."""
+    M, K = x.shape
+    E, Kw, N = w.shape
+    if Kw != K:
+        raise ValueError(f"x K={K} != w K={Kw}")
+    if group_offsets.shape != (E + 1,):
+        raise ValueError(f"offsets shape {group_offsets.shape} != ({E + 1},)")
+    bm = min(block_m, M)
+    bn = min(block_n, N)
+    if M % bm or N % bn:
+        raise ValueError(f"M={M} % {bm} or N={N} % {bn} != 0")
+    fn = _make_diff_gmm(bm, bn, bool(interpret))
+    return fn(x, w, group_offsets.astype(jnp.int32))
+
+
+def count_live_group_tiles(group_sizes, block_m: int) -> int:
+    """Host-side accounting: number of (m-tile, expert) grid cells that
+    do MXU work for the given per-expert row counts, vs the dense
+    ``n_m_tiles * E`` sweep.  Mirrors the kernel's intersection test."""
+    sizes = np.asarray(group_sizes, np.int64)
+    offs = np.concatenate([[0], np.cumsum(sizes)])
+    live = 0
+    for e in range(len(sizes)):
+        if sizes[e] == 0:
+            continue
+        live += (offs[e + 1] - 1) // block_m - offs[e] // block_m + 1
+    return int(live)

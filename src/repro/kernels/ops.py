@@ -13,9 +13,11 @@ from functools import partial
 import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.grouped_gemm import grouped_matmul as _gmm
 from repro.kernels.selective_scan import selective_scan as _scan
 
-__all__ = ["flash_attention_op", "selective_scan_op", "default_interpret"]
+__all__ = ["flash_attention_op", "grouped_matmul_op", "selective_scan_op",
+           "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -36,9 +38,18 @@ def flash_attention_op(q, k, v, q_seg, kv_seg, q_pos, kv_pos, *,
                   interpret=interpret, block_skip=block_skip)
 
 
-@partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+@partial(jax.jit, static_argnames=("block_d", "chunk", "interpret",
+                                   "return_state"))
 def selective_scan_op(u, delta, A, B, C, D, seg, *, block_d=128, chunk=64,
-                      interpret=None):
+                      interpret=None, return_state=False):
     interpret = default_interpret() if interpret is None else interpret
     return _scan(u, delta, A, B, C, D, seg, block_d=block_d, chunk=chunk,
-                 interpret=interpret)
+                 interpret=interpret, return_state=return_state)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def grouped_matmul_op(x, w, group_offsets, *, block_m=128, block_n=128,
+                      interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _gmm(x, w, group_offsets, block_m=block_m, block_n=block_n,
+                interpret=interpret)

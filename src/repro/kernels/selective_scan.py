@@ -1,4 +1,4 @@
-"""Mamba-1 selective scan, Pallas TPU kernel.
+"""Mamba-1 selective scan, Pallas TPU kernel (training grade).
 
 TPU adaptation of the CUDA selective-scan: instead of warp-level
 parallel prefix, we tile the CHANNEL dimension across the grid (each
@@ -10,6 +10,29 @@ streams).
 
 Grid: (n_channel_blocks, n_time_chunks) -- time innermost (sequential
 on TPU), channels outer (parallelizable).
+
+Differentiable: the forward kernel additionally emits the state at
+every chunk boundary (``ckpt [n_t, di, N]`` -- the same residual style
+as the flash backward's lse, one checkpoint per tile of sequential
+work) plus the final state, and a reverse-time backward kernel
+recomputes the per-step states inside each chunk from its checkpoint
+while propagating the state cotangent across chunks in scratch.  The
+recurrence
+
+    h_t = keep_t * exp(dt_t A) * h_{t-1} + (dt_t u_t) B_t
+    y_t = <h_t, C_t> + D u_t
+
+gives, with ``g_t = dL/dh_t`` accumulated as
+``g_t = dy_t C_t + keep_{t+1} exp(dt_{t+1} A) g_{t+1}``:
+
+    du_t  = D dy_t + dt_t <g_t, B_t>
+    ddt_t = <g_t, keep_t h_{t-1} A e^{dt_t A}> + u_t <g_t, B_t>
+    dA   += keep_t dt_t g_t h_{t-1} e^{dt_t A}      (summed over t)
+    dB_t  = sum_d g_t dt_t u_t       dC_t = sum_d dy_t h_t
+    dD   += dy_t u_t                                (summed over t)
+
+``selective_scan`` wraps the pair in a ``jax.custom_vjp`` (seg gets a
+symbolic-zero cotangent like the flash kernel's seg/pos inputs).
 """
 from __future__ import annotations
 
@@ -17,19 +40,22 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["selective_scan"]
 
 
-def _kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, keep_ref, y_ref,
-            h_scr, *, chunk):
+def _fwd_kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, keep_ref,
+                y_ref, ckpt_ref, hfin_ref, h_scr, *, chunk, n_t):
     it = pl.program_id(1)
 
     @pl.when(it == 0)
     def _init():
         h_scr[...] = jnp.zeros_like(h_scr)
+
+    ckpt_ref[0] = h_scr[...]  # state entering this chunk (bwd residual)
 
     u = u_ref[...].astype(jnp.float32)      # [ct, bd]
     dt = dt_ref[...].astype(jnp.float32)    # [ct, bd]
@@ -53,6 +79,197 @@ def _kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, keep_ref, y_ref,
     h_scr[...] = h
     y_ref[...] = ys.astype(y_ref.dtype)
 
+    @pl.when(it == n_t - 1)
+    def _emit_final():
+        hfin_ref[...] = h
+
+
+def _bwd_kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, keep_ref,
+                ckpt_ref, dy_ref, dhf_ref,
+                du_ref, ddt_ref, dB_ref, dC_ref, dA_ref, dD_ref,
+                g_scr, dA_scr, dD_scr, *, chunk, n_t):
+    it = pl.program_id(1)  # 0 = LAST time chunk (index maps reverse)
+
+    @pl.when(it == 0)
+    def _init():
+        g_scr[...] = dhf_ref[...]  # dL/dh_final enters the recurrence
+        dA_scr[...] = jnp.zeros_like(dA_scr)
+        dD_scr[...] = jnp.zeros_like(dD_scr)
+
+    u = u_ref[...].astype(jnp.float32)      # [ct, bd]
+    dt = dt_ref[...].astype(jnp.float32)
+    A = A_ref[...].astype(jnp.float32)      # [bd, N]
+    Bm = B_ref[...].astype(jnp.float32)     # [ct, N]
+    Cm = C_ref[...].astype(jnp.float32)
+    Dv = D_ref[...].astype(jnp.float32)     # [1, bd]
+    keep = keep_ref[...]                    # [ct, 1]
+    h0 = ckpt_ref[0]                        # [bd, N] state entering chunk
+    dy = dy_ref[...].astype(jnp.float32)    # [ct, bd]
+
+    # Recompute the post-step states of this chunk from its checkpoint.
+    def fstep(t, carry):
+        h, posts = carry
+        dA = jnp.exp(dt[t][:, None] * A)
+        h = jnp.where(keep[t, 0] > 0, h, 0.0) * dA + (
+            (dt[t] * u[t])[:, None] * Bm[t][None, :]
+        )
+        return h, posts.at[t].set(h)
+
+    posts0 = jnp.zeros((chunk,) + h0.shape, jnp.float32)
+    _, posts = jax.lax.fori_loop(0, chunk, fstep, (h0, posts0))
+
+    def bstep(r, carry):
+        g_nxt, dus, ddts, dBs, dCs, dAa, dDa = carry
+        t = chunk - 1 - r
+        h_t = posts[t]
+        h_prev = jnp.where(t > 0, posts[jnp.maximum(t - 1, 0)], h0)
+        hm = jnp.where(keep[t, 0] > 0, h_prev, 0.0)
+        dA_t = jnp.exp(dt[t][:, None] * A)
+        g = dy[t][:, None] * Cm[t][None, :] + g_nxt        # [bd, N]
+        gB = (g * Bm[t][None, :]).sum(axis=1)              # [bd]
+        dus = dus.at[t].set(dy[t] * Dv[0] + dt[t] * gB)
+        ddts = ddts.at[t].set((g * hm * A * dA_t).sum(axis=1) + u[t] * gB)
+        dAa = dAa + g * hm * dt[t][:, None] * dA_t
+        dBs = dBs.at[t].set((g * (dt[t] * u[t])[:, None]).sum(axis=0))
+        dCs = dCs.at[t].set((dy[t][:, None] * h_t).sum(axis=0))
+        dDa = dDa + dy[t] * u[t]
+        g_prev = jnp.where(keep[t, 0] > 0, dA_t * g, 0.0)
+        return g_prev, dus, ddts, dBs, dCs, dAa, dDa
+
+    bd, N = h0.shape
+    init = (g_scr[...],
+            jnp.zeros((chunk, bd), jnp.float32),
+            jnp.zeros((chunk, bd), jnp.float32),
+            jnp.zeros((chunk, N), jnp.float32),
+            jnp.zeros((chunk, N), jnp.float32),
+            dA_scr[...],
+            dD_scr[0])
+    g, dus, ddts, dBs, dCs, dAa, dDa = jax.lax.fori_loop(
+        0, chunk, bstep, init)
+
+    g_scr[...] = g
+    dA_scr[...] = dAa
+    dD_scr[0] = dDa
+    du_ref[...] = dus.astype(du_ref.dtype)
+    ddt_ref[...] = ddts.astype(ddt_ref.dtype)
+    dB_ref[0] = dBs
+    dC_ref[0] = dCs
+
+    @pl.when(it == n_t - 1)
+    def _emit():
+        dA_ref[...] = dA_scr[...]
+        dD_ref[...] = dD_scr[...]
+
+
+def _fwd_call(u, delta, A, B, C, D2, keep, *, bd, ct, interpret):
+    T, di = u.shape
+    N = A.shape[1]
+    n_d, n_t = di // bd, T // ct
+    kernel = functools.partial(_fwd_kernel, chunk=ct, n_t=n_t)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_d, n_t),
+        in_specs=[
+            pl.BlockSpec((ct, bd), lambda id_, it: (it, id_)),   # u
+            pl.BlockSpec((ct, bd), lambda id_, it: (it, id_)),   # delta
+            pl.BlockSpec((bd, N), lambda id_, it: (id_, 0)),     # A
+            pl.BlockSpec((ct, N), lambda id_, it: (it, 0)),      # B
+            pl.BlockSpec((ct, N), lambda id_, it: (it, 0)),      # C
+            pl.BlockSpec((1, bd), lambda id_, it: (0, id_)),     # D
+            pl.BlockSpec((ct, 1), lambda id_, it: (it, 0)),      # keep
+        ],
+        out_specs=[
+            pl.BlockSpec((ct, bd), lambda id_, it: (it, id_)),       # y
+            pl.BlockSpec((1, bd, N), lambda id_, it: (it, id_, 0)),  # ckpt
+            pl.BlockSpec((bd, N), lambda id_, it: (id_, 0)),         # h_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, di), u.dtype),
+            jax.ShapeDtypeStruct((n_t, di, N), jnp.float32),
+            jax.ShapeDtypeStruct((di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(u, delta, A, B, C, D2, keep)
+
+
+def _bwd_call(u, delta, A, B, C, D2, keep, ckpt, dy, dhf, *, bd, ct,
+              interpret):
+    T, di = u.shape
+    N = A.shape[1]
+    n_d, n_t = di // bd, T // ct
+    rev = lambda it: n_t - 1 - it  # noqa: E731 - shared reversed time index
+    kernel = functools.partial(_bwd_kernel, chunk=ct, n_t=n_t)
+    du, ddt, dBp, dCp, dA, dD = pl.pallas_call(
+        kernel,
+        grid=(n_d, n_t),
+        in_specs=[
+            pl.BlockSpec((ct, bd), lambda id_, it: (rev(it), id_)),    # u
+            pl.BlockSpec((ct, bd), lambda id_, it: (rev(it), id_)),    # delta
+            pl.BlockSpec((bd, N), lambda id_, it: (id_, 0)),           # A
+            pl.BlockSpec((ct, N), lambda id_, it: (rev(it), 0)),       # B
+            pl.BlockSpec((ct, N), lambda id_, it: (rev(it), 0)),       # C
+            pl.BlockSpec((1, bd), lambda id_, it: (0, id_)),           # D
+            pl.BlockSpec((ct, 1), lambda id_, it: (rev(it), 0)),       # keep
+            pl.BlockSpec((1, bd, N), lambda id_, it: (rev(it), id_, 0)),
+            pl.BlockSpec((ct, bd), lambda id_, it: (rev(it), id_)),    # dy
+            pl.BlockSpec((bd, N), lambda id_, it: (id_, 0)),           # dhf
+        ],
+        out_specs=[
+            pl.BlockSpec((ct, bd), lambda id_, it: (rev(it), id_)),    # du
+            pl.BlockSpec((ct, bd), lambda id_, it: (rev(it), id_)),    # ddt
+            pl.BlockSpec((1, ct, N), lambda id_, it: (id_, rev(it), 0)),
+            pl.BlockSpec((1, ct, N), lambda id_, it: (id_, rev(it), 0)),
+            pl.BlockSpec((bd, N), lambda id_, it: (id_, 0)),           # dA
+            pl.BlockSpec((1, bd), lambda id_, it: (0, id_)),           # dD
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, di), jnp.float32),
+            jax.ShapeDtypeStruct((T, di), jnp.float32),
+            jax.ShapeDtypeStruct((n_d, T, N), jnp.float32),
+            jax.ShapeDtypeStruct((n_d, T, N), jnp.float32),
+            jax.ShapeDtypeStruct((di, N), jnp.float32),
+            jax.ShapeDtypeStruct((1, di), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bd, N), jnp.float32),   # g carry across chunks
+            pltpu.VMEM((bd, N), jnp.float32),   # dA accumulator
+            pltpu.VMEM((1, bd), jnp.float32),   # dD accumulator
+        ],
+        interpret=interpret,
+    )(u, delta, A, B, C, D2, keep, ckpt, dy, dhf)
+    # Per-channel-block partials -> full dB/dC reductions.
+    return du, ddt, dA, dBp.sum(axis=0), dCp.sum(axis=0), dD[0]
+
+
+@functools.lru_cache(maxsize=None)
+def _make_diff_scan(bd, ct, interpret):
+    @jax.custom_vjp
+    def scan(u, delta, A, B, C, D2, keep):
+        y, _, hf = _fwd_call(u, delta, A, B, C, D2, keep,
+                             bd=bd, ct=ct, interpret=interpret)
+        return y, hf
+
+    def fwd(u, delta, A, B, C, D2, keep):
+        y, ckpt, hf = _fwd_call(u, delta, A, B, C, D2, keep,
+                                bd=bd, ct=ct, interpret=interpret)
+        return (y, hf), (u, delta, A, B, C, D2, keep, ckpt)
+
+    def bwd(res, cts):
+        u, delta, A, B, C, D2, keep, ckpt = res
+        dy, dhf = cts
+        du, ddt, dA, dB, dC, dD = _bwd_call(
+            u, delta, A, B, C, D2, keep, ckpt,
+            dy.astype(jnp.float32), dhf.astype(jnp.float32),
+            bd=bd, ct=ct, interpret=interpret)
+        return (du.astype(u.dtype), ddt.astype(delta.dtype),
+                dA.astype(A.dtype), dB.astype(B.dtype), dC.astype(C.dtype),
+                dD[None].astype(D2.dtype),
+                np.zeros(keep.shape, jax.dtypes.float0))
+
+    scan.defvjp(fwd, bwd)
+    return scan
+
 
 def selective_scan(
     u: jnp.ndarray,
@@ -65,39 +282,28 @@ def selective_scan(
     *,
     block_d: int = 128,
     chunk: int = 64,
-    interpret: bool = True,
-) -> jnp.ndarray:
+    interpret: bool | None = None,
+    return_state: bool = False,
+):
     """u, delta [T, di]; A [di, N]; B, C [T, N]; D [di]; seg [T] int32.
-    Returns y [T, di]."""
+    Returns y [T, di], or ``(y, h_final [di, N])`` with
+    ``return_state=True``.  Differentiable (chunk-checkpointed custom
+    VJP); ``interpret=None`` resolves via ``ops.default_interpret``."""
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
     T, di = u.shape
-    N = A.shape[1]
     bd = min(block_d, di)
     ct = min(chunk, T)
     if di % bd or T % ct:
         raise ValueError(f"di={di} % {bd} or T={T} % {ct} != 0")
-    n_d, n_t = di // bd, T // ct
 
     prev = jnp.concatenate([seg[:1], seg[:-1]])
     keep = ((seg > 0) & (seg == prev)).at[0].set(False)
     keep = keep.astype(jnp.int32)[:, None]  # [T, 1]
     D2 = D[None, :]  # [1, di]
 
-    kernel = functools.partial(_kernel, chunk=ct)
-    y = pl.pallas_call(
-        kernel,
-        grid=(n_d, n_t),
-        in_specs=[
-            pl.BlockSpec((ct, bd), lambda id_, it: (it, id_)),   # u
-            pl.BlockSpec((ct, bd), lambda id_, it: (it, id_)),   # delta
-            pl.BlockSpec((bd, N), lambda id_, it: (id_, 0)),     # A
-            pl.BlockSpec((ct, N), lambda id_, it: (it, 0)),      # B
-            pl.BlockSpec((ct, N), lambda id_, it: (it, 0)),      # C
-            pl.BlockSpec((1, bd), lambda id_, it: (0, id_)),     # D
-            pl.BlockSpec((ct, 1), lambda id_, it: (it, 0)),      # keep
-        ],
-        out_specs=pl.BlockSpec((ct, bd), lambda id_, it: (it, id_)),
-        out_shape=jax.ShapeDtypeStruct((T, di), u.dtype),
-        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
-        interpret=interpret,
-    )(u, delta, A, B, C, D2, keep)
-    return y
+    fn = _make_diff_scan(bd, ct, bool(interpret))
+    y, hf = fn(u, delta, A, B, C, D2, keep)
+    return (y, hf) if return_state else y

@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs import INPUT_SHAPES, get_config, input_specs, step_kind
 from repro.configs.registry import ARCHITECTURES
 from repro.launch.mesh import dp_axes_of, dp_shards_of, make_production_mesh
-from repro.launch.roofline import HW, analyze
+from repro.launch.roofline import HW, analyze, get_hw
 from repro.sharding.specs import (
     batch_specs,
     cache_sharding_specs,
@@ -164,7 +164,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool, comm_mode="a2a",
         return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                 "status": "skipped", "reason": "sub-quadratic attention required"}
     mesh = make_production_mesh(multi_pod=multi_pod)
-    hw = hw or HW(chips=int(np.prod(list(mesh.shape.values()))))
+    hw = hw or get_hw(chips=int(np.prod(list(mesh.shape.values()))))
     t0 = time.time()
     try:
         # Pass 1: production form (scan-over-layers) -- compile success,

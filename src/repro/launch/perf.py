@@ -129,12 +129,21 @@ def show(row, base=None):
 
 
 def main():
+    from repro.launch.roofline import HW_PRESETS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--exp", default=None)
     ap.add_argument("--list", action="store_true")
     ap.add_argument("--out", default="experiments/perf")
     ap.add_argument("--baseline-dir", default="experiments/dryrun")
+    ap.add_argument("--hw", default=None, choices=sorted(HW_PRESETS),
+                    help="hardware preset for roofline terms (default: "
+                         "$REPRO_HW or v5e)")
     args = ap.parse_args()
+    if args.hw:
+        # run_pair -> get_hw reads the env var; setting it here also
+        # covers any nested dry-run invocations.
+        os.environ["REPRO_HW"] = args.hw
     if args.list:
         for k, (a, s, vs) in EXPERIMENTS.items():
             print(f"{k}: {a} x {s} -> {sorted(vs)}")

@@ -11,17 +11,22 @@ sum the RESULT buffer sizes of every all-gather / all-reduce /
 reduce-scatter / all-to-all / collective-permute / ragged-all-to-all op
 (per-device module => per-device bytes).
 
-Hardware model: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
-ICI (DCI between pods is slower; collectives that cross the 'pod' axis
-are reported separately via their replica-group parse when available).
+Hardware model: named presets in ``HW_PRESETS`` (defaults to TPU v5e --
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI; DCI between pods is
+slower; collectives that cross the 'pod' axis are reported separately
+via their replica-group parse when available).  ``get_hw`` resolves a
+preset by name or from the ``REPRO_HW`` env var, so roofline and
+autotuner predictions aren't silently v5e numbers on other targets.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import re
 from typing import Any
 
-__all__ = ["HW", "RooflineReport", "collective_bytes", "analyze"]
+__all__ = ["HW", "HW_PRESETS", "get_hw", "RooflineReport",
+           "collective_bytes", "analyze"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +35,32 @@ class HW:
     hbm_bw: float = 819e9  # B/s
     ici_bw: float = 50e9  # B/s/link
     chips: int = 256
+    name: str = "v5e"
+
+
+# Public per-chip specs (bf16 peak, HBM bandwidth, per-link ICI).
+HW_PRESETS: dict[str, HW] = {
+    "v4": HW(peak_flops=275e12, hbm_bw=1228e9, ici_bw=50e9, name="v4"),
+    "v5e": HW(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9, name="v5e"),
+    "v5p": HW(peak_flops=459e12, hbm_bw=2765e9, ici_bw=100e9, name="v5p"),
+    "v6e": HW(peak_flops=918e12, hbm_bw=1640e9, ici_bw=100e9, name="v6e"),
+}
+
+
+def get_hw(name: str | None = None, *, chips: int | None = None) -> HW:
+    """Resolve a hardware preset: explicit ``name`` > ``REPRO_HW`` env
+    var > "v5e".  ``chips`` overrides the preset's chip count (e.g. from
+    the actual mesh)."""
+    name = name or os.environ.get("REPRO_HW") or "v5e"
+    try:
+        hw = HW_PRESETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown HW preset {name!r}; choose from {sorted(HW_PRESETS)}"
+        ) from None
+    if chips is not None:
+        hw = dataclasses.replace(hw, chips=chips)
+    return hw
 
 
 _DTYPE_BYTES = {

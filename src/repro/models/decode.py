@@ -164,7 +164,9 @@ def _dense_ffn(cfg, lp, h):
     if cfg.family == "moe":
         ff, _ = moe_ffn(h[:, None, :], lp["router"], lp["w_gate"], lp["w_up"],
                         lp["w_down"], top_k=cfg.experts_per_token,
-                        capacity_factor=cfg.capacity_factor)
+                        capacity_factor=cfg.capacity_factor,
+                        backend=cfg.moe_backend, block_m=cfg.moe_block_m,
+                        block_n=cfg.moe_block_n)
         return ff[:, 0]
     return swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
 

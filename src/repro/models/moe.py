@@ -1,25 +1,47 @@
 """Mixture-of-Experts FFN (grok-1: 8e top-2; granite: 40e top-8).
 
-Sort-based capacity dispatch (TPU-friendly, static shapes):
-  1. router logits -> top-k (expert id, weight) per token
-  2. flatten (token, k) assignments, sort by expert id
-  3. slot within expert = rank inside its expert's contiguous run
-  4. scatter tokens into a [E, C, d] buffer (drop beyond capacity C)
-  5. batched expert matmuls [E,C,d] x [E,d,f]
-  6. gather back and combine with router weights
+Two dispatch backends behind ``moe_ffn(backend=...)``, sharing one
+routing prologue (top-k over router softmax, invalid/padding
+assignments remapped to a sentinel expert so they never steal capacity
+or rows):
 
-Expert parallelism: the [E,C,*] buffers and expert weights carry
-sharding constraints over the ``model`` mesh axis (weights: d_ff dim;
-buffers: capacity dim), so the big matmuls are tensor-parallel within
-each expert -- this avoids requiring n_experts % mesh_model == 0
-(grok has 8 experts on a 16-wide model axis).
+  "dense"    legacy sort + scatter into a [E, capacity, d] buffer:
+             static shapes, but pays E*capacity rows of matmul and
+             silently drops assignments past capacity (the dropped
+             fraction is now reported as an aux metric).
+
+  "grouped"  drop-free sorted dispatch: tokens sorted by expert form
+             contiguous variable-length groups, and the three expert
+             matmuls run through the Pallas grouped-GEMM kernel
+             (``kernels/grouped_gemm.py``) with scalar-prefetch group
+             offsets and tile-skip over empty experts.  Work scales
+             with the routed rows (aligned up to the tile), not with
+             E * max-capacity, no matter how imbalanced the routing.
+
+Both return aux metrics: the Switch-style load-balance loss over ALL
+top-k slots, the realized per-expert load fractions, and the dropped
+fraction (identically 0.0 for "grouped").
+
+Token-to-expert routing is the paper's imbalanced-assignment problem
+one level down: ``expert_shard_plan`` reuses the chunked-exact LPT
+engine from ``core/balancing_vec.py`` to bin experts onto expert-
+parallel shards from the *measured* loads the aux metrics report, and
+to derive the capacity a drop-free dense dispatch would need.
+
+Expert parallelism (dense path): the [E,C,*] buffers and expert
+weights carry sharding constraints over the ``model`` mesh axis
+(weights: d_ff dim; buffers: capacity dim), so the big matmuls are
+tensor-parallel within each expert -- this avoids requiring
+n_experts % mesh_model == 0 (grok has 8 experts on a 16-wide model
+axis).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["moe_ffn", "router_load_balance_loss"]
+__all__ = ["moe_ffn", "router_load_balance_loss", "expert_shard_plan"]
 
 
 def moe_ffn(
@@ -33,15 +55,30 @@ def moe_ffn(
     capacity_factor: float = 1.25,
     valid: jnp.ndarray | None = None,
     shard_buffers: bool = False,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+    backend: str = "dense",
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     """x: [B, T, d]; router_w: [d, E]; w_*: [E, d, f] / [E, f, d].
 
-    ``valid``: [B, T] bool -- padding tokens get zero routing weight so
-    they never steal capacity (post-balancing keeps padding minimal, but
-    the packed stream tail may be padded to the static capacity).
+    ``valid``: [B, T] bool -- padding tokens get zero routing weight and
+    are remapped to a sentinel expert, so they never steal capacity
+    (post-balancing keeps padding minimal, but the packed stream tail
+    may be padded to the static shape).
 
-    Returns (output [B,T,d], aux metrics dict packed as an array tuple).
+    Returns ``(output [B,T,d], aux)`` where ``aux`` is a dict of
+    metrics:
+
+      "lb_loss"       Switch-style load-balance loss (scalar; counts
+                      all top-k slots)
+      "expert_load"   [E] realized fraction of routed assignments
+      "dropped_frac"  fraction of valid assignments dropped by the
+                      capacity buffer (0.0 on the drop-free "grouped"
+                      backend)
     """
+    if backend not in ("dense", "grouped"):
+        raise ValueError(f"unknown moe backend {backend!r}")
     B, T, d = x.shape
     E = router_w.shape[-1]
     n = B * T
@@ -56,23 +93,58 @@ def moe_ffn(
     if valid is not None:
         gate_vals = gate_vals * valid.reshape(n, 1)
 
-    # Flatten assignments and sort by expert.
+    # Flatten assignments; invalid tokens route to sentinel expert E
+    # (sorts past every real expert -> zero rows, zero capacity use).
     flat_e = gate_ids.reshape(-1)  # [n*k]
+    if valid is not None:
+        flat_e = jnp.where(jnp.repeat(valid.reshape(n), top_k), flat_e, E)
     flat_tok = jnp.repeat(jnp.arange(n), top_k)
     order = jnp.argsort(flat_e, stable=True)
     sorted_e = flat_e[order]
     sorted_tok = flat_tok[order]
 
-    # Rank within expert run: position - start_of_expert.
-    counts = jnp.zeros(E, jnp.int32).at[flat_e].add(1)
+    counts = jnp.zeros(E + 1, jnp.int32).at[flat_e].add(1)
+    n_routed = jnp.maximum(counts[:E].sum(), 1)
+    expert_load = counts[:E].astype(jnp.float32) / n_routed.astype(jnp.float32)
+
+    if backend == "grouped":
+        expert_out, dropped = _grouped_dispatch(
+            xf, w_gate, w_up, w_down, sorted_tok, counts, n, top_k,
+            block_m=block_m, block_n=block_n, interpret=interpret)
+    else:
+        expert_out, dropped = _dense_dispatch(
+            xf, w_gate, w_up, w_down, sorted_e, sorted_tok, order, counts,
+            n, top_k, E, capacity_factor, shard_buffers)
+
+    inv = jnp.argsort(order, stable=True)
+    expert_out = expert_out[inv].reshape(n, top_k, d)
+    combined = jnp.einsum("nkd,nk->nd", expert_out.astype(jnp.float32),
+                          gate_vals.astype(jnp.float32))
+
+    aux = {
+        "lb_loss": router_load_balance_loss(
+            probs, gate_ids, E, valid.reshape(n) if valid is not None else None,
+            top_k=top_k),
+        "expert_load": expert_load,
+        "dropped_frac": dropped.astype(jnp.float32) / n_routed.astype(jnp.float32),
+    }
+    return combined.reshape(B, T, d).astype(x.dtype), aux
+
+
+def _dense_dispatch(xf, w_gate, w_up, w_down, sorted_e, sorted_tok, order,
+                    counts, n, top_k, E, capacity_factor, shard_buffers):
+    """Legacy capacity-buffer path.  Returns outputs in SORTED
+    assignment order [n*k, d] plus the dropped-assignment count."""
+    d = xf.shape[1]
     starts = jnp.cumsum(counts) - counts
     rank = jnp.arange(n * top_k) - starts[sorted_e]
 
     capacity = int(max(1, round(n * top_k / E * capacity_factor)))
-    keep = rank < capacity
-    slot = jnp.where(keep, sorted_e * capacity + rank, E * capacity)  # overflow -> dropped row
+    keep = (rank < capacity) & (sorted_e < E)
+    dropped = counts[:E].sum() - keep.sum()
+    slot = jnp.where(keep, sorted_e * capacity + rank, E * capacity)
 
-    buf = jnp.zeros((E * capacity + 1, d), x.dtype)
+    buf = jnp.zeros((E * capacity + 1, d), xf.dtype)
     buf = buf.at[slot].set(xf[sorted_tok], mode="drop")
     buf = buf[:-1].reshape(E, capacity, d)
     if shard_buffers:
@@ -89,31 +161,94 @@ def moe_ffn(
     h = jax.nn.silu(g) * u
     out_buf = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(E * capacity, d)
     out_buf = jnp.concatenate([out_buf, jnp.zeros((1, d), out_buf.dtype)], axis=0)
+    return out_buf[slot], dropped  # dropped slot -> zeros row
 
-    # Gather back to (token, k) order and combine.
-    expert_out = out_buf[slot]  # [n*k, d] (dropped -> zeros row)
-    inv = jnp.argsort(order, stable=True)
-    expert_out = expert_out[inv].reshape(n, top_k, d)
-    combined = jnp.einsum("nkd,nk->nd", expert_out.astype(jnp.float32),
-                          gate_vals.astype(jnp.float32))
 
-    aux = router_load_balance_loss(probs, gate_ids, E, valid.reshape(n) if valid is not None else None)
-    return combined.reshape(B, T, d).astype(x.dtype), aux
+def _grouped_dispatch(xf, w_gate, w_up, w_down, sorted_tok, counts, n,
+                      top_k, *, block_m, block_n, interpret):
+    """Drop-free grouped-GEMM path.  Returns outputs in SORTED
+    assignment order [n*k, d]; never drops (dropped count = 0)."""
+    from repro.kernels.ops import grouped_matmul_op
+
+    d = xf.shape[1]
+    offsets = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts[:-1]).astype(jnp.int32)])
+    xs = xf[sorted_tok]  # [n*k, d] sorted by expert; sentinel rows last
+    M = n * top_k
+    bm = min(block_m, M)
+    pad = (-M) % bm
+    if pad:
+        xs = jnp.concatenate([xs, jnp.zeros((pad, d), xs.dtype)])
+
+    g = grouped_matmul_op(xs, w_gate, offsets, block_m=bm,
+                          block_n=_divisor_block(w_gate.shape[-1], block_n),
+                          interpret=interpret)
+    u = grouped_matmul_op(xs, w_up, offsets, block_m=bm,
+                          block_n=_divisor_block(w_up.shape[-1], block_n),
+                          interpret=interpret)
+    h = jax.nn.silu(g) * u
+    out = grouped_matmul_op(h, w_down, offsets, block_m=bm,
+                            block_n=_divisor_block(d, block_n),
+                            interpret=interpret)
+    if pad:
+        out = out[:M]
+    return out, jnp.int32(0)
+
+
+def _divisor_block(size: int, target: int) -> int:
+    """Largest block <= target that divides size (trace-time helper)."""
+    for b in range(min(target, size), 0, -1):
+        if size % b == 0:
+            return b
+    return 1
 
 
 def router_load_balance_loss(
     probs: jnp.ndarray, gate_ids: jnp.ndarray, n_experts: int,
-    valid: jnp.ndarray | None = None,
+    valid: jnp.ndarray | None = None, *, top_k: int | None = None,
 ) -> jnp.ndarray:
-    """Switch-style aux loss: E * sum_e fraction_tokens_e * mean_prob_e."""
-    n = probs.shape[0]
-    top1 = gate_ids[:, 0]
-    onehot = jax.nn.one_hot(top1, n_experts, dtype=jnp.float32)
+    """Switch-style aux loss: E * sum_e fraction_slots_e * mean_prob_e.
+
+    Counts ALL top-k assignment slots (normalized by k) -- a top-8
+    router whose 2nd..8th choices pile onto one expert is imbalanced
+    even when the top-1 choices are uniform.  Balanced-uniform routing
+    (uniform probs, uniform slot usage) gives exactly 1.0 for any k.
+    """
+    n, k = gate_ids.shape
+    if top_k is not None and top_k != k:
+        raise ValueError(f"top_k={top_k} != gate_ids k={k}")
+    onehot = jax.nn.one_hot(gate_ids, n_experts, dtype=jnp.float32).sum(1) / k
     if valid is not None:
-        onehot = onehot * valid[:, None]
-        denom = jnp.clip(valid.sum(), 1.0)
+        vf = valid.astype(jnp.float32)
+        onehot = onehot * vf[:, None]
+        denom = jnp.clip(vf.sum(), 1.0)
+        mean_p = (probs * vf[:, None]).sum(0) / denom
     else:
         denom = float(n)
+        mean_p = probs.mean(0)
     frac = onehot.sum(0) / denom
-    mean_p = probs.mean(0)
     return n_experts * jnp.sum(frac * mean_p)
+
+
+def expert_shard_plan(
+    expert_load: np.ndarray, n_shards: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side planner: bin experts onto ``n_shards`` expert-parallel
+    shards balancing *measured* load, via the chunked-exact LPT engine
+    from ``core/balancing_vec.py`` (token-to-expert routing is the
+    paper's imbalanced-assignment problem one level down).
+
+    ``expert_load``: [E] nonnegative loads (e.g. the ``expert_load``
+    aux metric from ``moe_ffn``, or raw token counts).  Returns
+    ``(assignment [E] int, shard_loads [n_shards] float)``.
+    """
+    from repro.core.balancing_vec import lpt_assign
+
+    loads = np.asarray(expert_load, np.float64)
+    if loads.ndim != 1 or n_shards < 1:
+        raise ValueError(f"bad plan inputs: {loads.shape}, {n_shards}")
+    order = np.argsort(-loads, kind="stable")
+    assign_sorted, _, shard_loads = lpt_assign(loads[order], n_shards)
+    assignment = np.empty(loads.size, np.int64)
+    assignment[order] = assign_sorted
+    return assignment, shard_loads

@@ -4,10 +4,21 @@ Segment-aware for packed post-balanced streams: the recurrent state
 resets at example boundaries (seg change) so balancing rearrangements
 stay consequence-invariant for SSMs too.
 
-Training path: chunked sequential scan -- outer ``lax.scan`` over chunks
-carries only the small state; the chunk body is ``jax.checkpoint``ed so
-backward keeps per-chunk states instead of per-step residuals (the
-standard memory treatment for long-sequence SSM training).
+Training path, two backends behind ``mamba1_scan``/``mamba2_scan``
+(``backend=``):
+
+  "scan"    chunked sequential scan -- outer ``lax.scan`` over chunks
+            carries only the small state; the chunk body is
+            ``jax.checkpoint``ed so backward keeps per-chunk states
+            instead of per-step residuals (the standard memory
+            treatment for long-sequence SSM training).
+  "pallas"  the fused kernel (``kernels/selective_scan.py``): channel
+            blocks across the grid, time walked in VMEM-resident
+            chunks, chunk-checkpointed custom VJP.  Mamba-2's
+            per-head scalar decay maps onto the same kernel by
+            broadcasting head quantities over the head dim (the
+            broadcasts sit outside the kernel's custom_vjp, so their
+            gradient reductions are plain JAX transposes).
 
 Decode path: O(1) per-token state update (this is why the long_500k
 shape is SSM/hybrid-only).
@@ -65,10 +76,32 @@ def _chunked_scan(step_fn, state0, xs, chunk: int):
     return state_f, ys
 
 
-def mamba1_scan(u, delta, A, B, C, D, seg, *, chunk: int = 256, h0=None):
+def _fit_block(size: int, target: int) -> int:
+    """Largest block <= target dividing size (kernel divisibility)."""
+    for b in range(min(target, size), 0, -1):
+        if size % b == 0:
+            return b
+    return 1
+
+
+def mamba1_scan(u, delta, A, B, C, D, seg, *, chunk: int = 256, h0=None,
+                backend: str = "scan", block_d: int = 128):
     """Selective scan.  Shapes (single stream; vmap over batch):
       u [T, di], delta [T, di], A [di, N], B [T, N], C [T, N], D [di],
       seg [T].  Returns (y [T, di], h_final [di, N])."""
+    if backend == "pallas":
+        if h0 is not None:
+            raise ValueError("pallas selective scan starts from h=0 "
+                             "(h0 is a scan-backend knob)")
+        from repro.kernels.ops import selective_scan_op
+
+        T, di = u.shape
+        return selective_scan_op(
+            u, delta, A, B, C, D, seg,
+            block_d=_fit_block(di, block_d), chunk=_fit_block(T, chunk),
+            return_state=True)
+    if backend != "scan":
+        raise ValueError(f"unknown ssm backend {backend!r}")
     keep = (seg > 0) & (seg == jnp.concatenate([seg[:1], seg[:-1]]))
     keep = keep.at[0].set(False)  # first token always starts a segment
 
@@ -87,11 +120,33 @@ def mamba1_scan(u, delta, A, B, C, D, seg, *, chunk: int = 256, h0=None):
     return y.astype(u.dtype), hf
 
 
-def mamba2_scan(x, delta, A_log, B, C, D, seg, *, chunk: int = 256, h0=None):
+def mamba2_scan(x, delta, A_log, B, C, D, seg, *, chunk: int = 256, h0=None,
+                backend: str = "scan", block_d: int = 128):
     """Mamba-2 SSD (scalar decay per head).  Shapes (single stream):
       x [T, H, P], delta [T, H], A_log [H], B [T, N], C [T, N], D [H],
       seg [T].  Returns (y [T, H, P], h_final [H, P, N])."""
     A = -jnp.exp(A_log.astype(jnp.float32))  # [H]
+    if backend == "pallas":
+        if h0 is not None:
+            raise ValueError("pallas selective scan starts from h=0 "
+                             "(h0 is a scan-backend knob)")
+        from repro.kernels.ops import selective_scan_op
+
+        T, H, P = x.shape
+        N = B.shape[-1]
+        # Broadcast per-head scalars over the head dim: channel (h, p)
+        # runs the mamba1 recurrence with dt/A/D of head h.
+        u2 = x.reshape(T, H * P)
+        d2 = jnp.repeat(delta, P, axis=1)
+        A2 = jnp.broadcast_to(jnp.repeat(A, P)[:, None], (H * P, N))
+        D2 = jnp.repeat(D, P)
+        y, hf = selective_scan_op(
+            u2, d2, A2, B, C, D2, seg,
+            block_d=_fit_block(H * P, block_d), chunk=_fit_block(T, chunk),
+            return_state=True)
+        return y.reshape(T, H, P), hf.reshape(H, P, N)
+    if backend != "scan":
+        raise ValueError(f"unknown ssm backend {backend!r}")
     keep = (seg > 0) & (seg == jnp.concatenate([seg[:1], seg[:-1]]))
     keep = keep.at[0].set(False)
 
@@ -118,7 +173,8 @@ def mamba2_scan(x, delta, A_log, B, C, D, seg, *, chunk: int = 256, h0=None):
 # Full blocks (projections + conv + scan + gate), matching param layout
 # in repro.models.model.
 # ----------------------------------------------------------------------
-def mamba1_block(p, x, seg, *, ssm_state: int, chunk: int = 256):
+def mamba1_block(p, x, seg, *, ssm_state: int, chunk: int = 256,
+                 backend: str = "scan", block_d: int = 128):
     """x [B,T,d] -> [B,T,d].  p: dict of this block's params."""
     xz = jnp.einsum("btd,de->bte", x, p["in_proj"])  # [B,T,2*di]
     xi, z = jnp.split(xz, 2, axis=-1)
@@ -131,7 +187,8 @@ def mamba1_block(p, x, seg, *, ssm_state: int, chunk: int = 256):
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
 
     def one(u_s, delta_s, B_s, C_s, seg_s):
-        y, _ = mamba1_scan(u_s, delta_s, A, B_s, C_s, p["D"], seg_s, chunk=chunk)
+        y, _ = mamba1_scan(u_s, delta_s, A, B_s, C_s, p["D"], seg_s,
+                           chunk=chunk, backend=backend, block_d=block_d)
         return y
 
     y = jax.vmap(one)(xi, delta, Bm, Cm, seg)
@@ -139,7 +196,8 @@ def mamba1_block(p, x, seg, *, ssm_state: int, chunk: int = 256):
     return jnp.einsum("bte,ed->btd", y, p["out_proj"])
 
 
-def mamba2_block(p, x, seg, *, ssm_state: int, headdim: int, chunk: int = 256):
+def mamba2_block(p, x, seg, *, ssm_state: int, headdim: int, chunk: int = 256,
+                 backend: str = "scan", block_d: int = 128):
     """x [B,T,d] -> [B,T,d] (Mamba-2, n_groups=1)."""
     di = p["out_proj"].shape[0]
     H = di // headdim
@@ -153,7 +211,8 @@ def mamba2_block(p, x, seg, *, ssm_state: int, headdim: int, chunk: int = 256):
     xh = xi.reshape(xi.shape[0], xi.shape[1], H, headdim)
 
     def one(x_s, delta_s, B_s, C_s, seg_s):
-        y, _ = mamba2_scan(x_s, delta_s, p["A_log"], B_s, C_s, p["D"], seg_s, chunk=chunk)
+        y, _ = mamba2_scan(x_s, delta_s, p["A_log"], B_s, C_s, p["D"], seg_s,
+                           chunk=chunk, backend=backend, block_d=block_d)
         return y
 
     y = jax.vmap(one)(xh, delta, Bm, Cm, seg)

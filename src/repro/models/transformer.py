@@ -21,12 +21,35 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import autotune
 from repro.models.attention import attention, windowed_variant
 from repro.models.layers import apply_rope, gelu_mlp, layer_norm, rms_norm, rotary_embedding, swiglu
 from repro.models.moe import moe_ffn
 from repro.models.ssm import mamba1_block, mamba2_block
 
 Params = dict[str, Any]
+
+
+def _tuned_blocks(cfg: ModelConfig, kernel: str, key: dict,
+                  default: tuple[int, int]) -> tuple[int, int]:
+    """Trace-time autotune-cache lookup (no-op unless
+    cfg.kernel_autotune; env override always wins)."""
+    return autotune.resolve(kernel, key, default,
+                            enabled=cfg.kernel_autotune,
+                            cache_path=cfg.autotune_cache)
+
+
+def _ssm_kwargs(cfg: ModelConfig, T: int) -> dict:
+    """Backend/block kwargs for the mamba blocks.  The scan backend
+    keeps its historical chunking defaults; the pallas backend takes
+    block_d/chunk from the config (or the autotune cache)."""
+    if cfg.ssm_backend != "pallas":
+        return {}
+    bd, ct = _tuned_blocks(
+        cfg, "scan",
+        dict(T=T, di=cfg.d_inner, N=cfg.ssm_state, dtype=cfg.dtype),
+        (cfg.ssm_block_d, cfg.ssm_chunk))
+    return dict(backend="pallas", block_d=bd, chunk=ct)
 
 
 def _norm(cfg: ModelConfig, x, scale):
@@ -58,12 +81,18 @@ def _attend(cfg: ModelConfig, p: Params, x, seg, pos, sin, cos, *,
     backend = impl or cfg.attention_backend
     if cfg.segment_window and kv is None and backend != "reference":
         backend = windowed_variant(backend)
+    bq, bk = cfg.block_q, cfg.block_kv
+    if backend.startswith("flash"):
+        bq, bk = _tuned_blocks(
+            cfg, "flash",
+            dict(Tq=T, Tkv=k.shape[1], D=hd, H=H, dtype=cfg.dtype),
+            (bq, bk))
     out = attention(
         q, k, v,
         q_seg=seg, kv_seg=kv_seg, q_pos=pos, kv_pos=kv_pos,
         causal=causal, window=cfg.sliding_window if kv is None else None,
         backend=backend,
-        block_q=cfg.block_q, block_kv=cfg.block_kv,
+        block_q=bq, block_kv=bk,
         chunk_w=cfg.segment_window,
     )
     return jnp.einsum("bthe,hed->btd", out, p["wo"].reshape(H, hd, D))
@@ -71,10 +100,17 @@ def _attend(cfg: ModelConfig, p: Params, x, seg, pos, sin, cos, *,
 
 def _ffn(cfg: ModelConfig, p: Params, x, valid):
     if cfg.family == "moe":
+        B, T, d = x.shape
+        bm, bn = _tuned_blocks(
+            cfg, "grouped",
+            dict(M=B * T * cfg.experts_per_token, K=d, N=cfg.d_ff,
+                 E=cfg.n_experts, dtype=cfg.dtype),
+            (cfg.moe_block_m, cfg.moe_block_n))
         return moe_ffn(
             x, p["router"], p["w_gate"], p["w_up"], p["w_down"],
             top_k=cfg.experts_per_token, capacity_factor=cfg.capacity_factor,
             valid=valid, shard_buffers=cfg.moe_shard_buffers,
+            backend=cfg.moe_backend, block_m=bm, block_n=bn,
         )
     if cfg.family == "audio":
         return gelu_mlp(x, p["w_in"], p["w_out"]), jnp.float32(0.0)
@@ -93,8 +129,11 @@ def _attn_mlp_layer(cfg: ModelConfig, p: Params, x, seg, pos, sin, cos, *, causa
 # Forward stacks (training / prefill).
 # ----------------------------------------------------------------------
 def decoder_stack(cfg: ModelConfig, params: Params, x, seg, pos):
-    """x [B,T,D] -> ([B,T,D], aux_loss scalar).  params["layers"] leaves
-    are stacked [L, ...]."""
+    """x [B,T,D] -> ([B,T,D], aux).  ``aux`` is the scalar aux loss,
+    except for the moe family where it is a dict (``lb_loss`` scalar
+    summed over layers plus ``expert_load`` [E] / ``dropped_frac``
+    metrics averaged over layers).  params["layers"] leaves are stacked
+    [L, ...]."""
     sin, cos = rotary_embedding(pos, cfg.head_dim_, cfg.rope_theta)
 
     if cfg.family in ("dense", "moe", "vlm"):
@@ -105,12 +144,20 @@ def decoder_stack(cfg: ModelConfig, params: Params, x, seg, pos):
         body = jax.checkpoint(body) if cfg.remat else body
         x, auxs = jax.lax.scan(body, x, params["layers"],
                                unroll=min(cfg.scan_unroll, cfg.n_layers))
+        if cfg.family == "moe":
+            return x, {
+                "lb_loss": auxs["lb_loss"].sum(),
+                "expert_load": auxs["expert_load"].mean(axis=0),
+                "dropped_frac": auxs["dropped_frac"].mean(),
+            }
         return x, auxs.sum()
 
     if cfg.family == "ssm":
+        ssm_kw = _ssm_kwargs(cfg, x.shape[1])
+
         def body(carry, lp):
             h = _norm(cfg, carry, lp.get("norm"))
-            y = mamba1_block(lp, h, seg, ssm_state=cfg.ssm_state)
+            y = mamba1_block(lp, h, seg, ssm_state=cfg.ssm_state, **ssm_kw)
             return carry + y, jnp.float32(0.0)
 
         body = jax.checkpoint(body) if cfg.remat else body
@@ -136,9 +183,12 @@ def _hybrid_stack(cfg: ModelConfig, params: Params, x, seg, pos, sin, cos):
         lambda a: a.reshape((n_groups, every) + a.shape[1:]), params["layers"]
     )
 
+    ssm_kw = _ssm_kwargs(cfg, x.shape[1])
+
     def mamba_body(carry, lp):
         h = _norm(cfg, carry, lp.get("norm"))
-        y = mamba2_block(lp, h, seg, ssm_state=cfg.ssm_state, headdim=cfg.ssm_headdim)
+        y = mamba2_block(lp, h, seg, ssm_state=cfg.ssm_state,
+                         headdim=cfg.ssm_headdim, **ssm_kw)
         return carry + y, None
 
     mamba_body_ck = jax.checkpoint(mamba_body) if cfg.remat else mamba_body

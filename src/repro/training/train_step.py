@@ -101,8 +101,15 @@ def make_loss_fn(cfg: ModelConfig, mesh=None, dp_axes=("data",), *,
         ex = exchange_factory(batch) if cfg.encoders else None
         loss_sum, n, aux = forward(cfg, params, batch, exchange=ex)
         n = jnp.maximum(n, 1)
-        loss = loss_sum / n + 0.01 * aux
-        return loss, {"loss": loss_sum / n, "aux_loss": aux, "tokens": n}
+        # moe family returns an aux metrics dict; only the load-balance
+        # loss enters the objective, the rest surface as metrics.
+        aux_loss = aux["lb_loss"] if isinstance(aux, dict) else aux
+        loss = loss_sum / n + 0.01 * aux_loss
+        metrics = {"loss": loss_sum / n, "aux_loss": aux_loss, "tokens": n}
+        if isinstance(aux, dict):
+            metrics["moe_dropped_frac"] = aux["dropped_frac"]
+            metrics["moe_max_expert_load"] = aux["expert_load"].max()
+        return loss, metrics
 
     return loss_fn
 

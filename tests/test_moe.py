@@ -1,0 +1,181 @@
+"""MoE dispatch semantics: grouped vs dense backend parity, capacity /
+drop accounting, the load-balance loss contract, and the measured-load
+expert-to-shard planner."""
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import expert_shard_plan, moe_ffn, router_load_balance_loss
+
+
+def _moe_inputs(rng, B, T, d, f, E, *, dtype=jnp.float32):
+    x = jnp.asarray(rng.normal(size=(B, T, d)), dtype)
+    router_w = jnp.asarray(rng.normal(0, 0.5, size=(d, E)), jnp.float32)
+    w_gate = jnp.asarray(rng.normal(0, 0.1, size=(E, d, f)), dtype)
+    w_up = jnp.asarray(rng.normal(0, 0.1, size=(E, d, f)), dtype)
+    w_down = jnp.asarray(rng.normal(0, 0.1, size=(E, f, d)), dtype)
+    return x, router_w, w_gate, w_up, w_down
+
+
+@pytest.mark.parametrize("top_k,with_valid", [(1, False), (2, True), (4, True)])
+def test_grouped_matches_dense_when_nothing_drops(top_k, with_valid):
+    """With capacity high enough that dense drops nothing, the two
+    backends compute the same function -- outputs and weight/input
+    gradients must agree."""
+    rng = np.random.default_rng(0)
+    B, T, d, f, E = 2, 32, 16, 32, 4
+    x, router_w, w_gate, w_up, w_down = _moe_inputs(rng, B, T, d, f, E)
+    valid = None
+    if with_valid:
+        v = np.ones((B, T), bool)
+        v[:, -5:] = False
+        valid = jnp.asarray(v)
+
+    def run(backend):
+        def loss(x, w_gate, w_up, w_down):
+            out, aux = moe_ffn(
+                x, router_w, w_gate, w_up, w_down, top_k=top_k,
+                capacity_factor=float(E),  # capacity == n*k: cannot drop
+                valid=valid, backend=backend, block_m=32, block_n=16)
+            return jnp.sum(jnp.sin(out)), (out, aux)
+        (l, (out, aux)), grads = jax.value_and_grad(
+            loss, argnums=(0, 1, 2, 3), has_aux=True)(x, w_gate, w_up, w_down)
+        return out, aux, grads
+
+    out_g, aux_g, grads_g = run("grouped")
+    out_d, aux_d, grads_d = run("dense")
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_d),
+                               atol=1e-5, rtol=1e-5)
+    assert float(aux_d["dropped_frac"]) == 0.0
+    assert float(aux_g["dropped_frac"]) == 0.0
+    np.testing.assert_allclose(float(aux_g["lb_loss"]), float(aux_d["lb_loss"]))
+    np.testing.assert_allclose(np.asarray(aux_g["expert_load"]),
+                               np.asarray(aux_d["expert_load"]))
+    for name, gg, gd in zip(("dx", "dw_gate", "dw_up", "dw_down"),
+                            grads_g, grads_d):
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(gd),
+                                   atol=2e-4, rtol=2e-4, err_msg=name)
+
+
+def test_high_capacity_factor_means_zero_drops():
+    """The docstring contract: capacity_factor sized to the worst case
+    (all assignments on one expert) guarantees dropped_frac == 0."""
+    rng = np.random.default_rng(1)
+    B, T, d, f, E = 2, 16, 8, 16, 4
+    x, router_w, w_gate, w_up, w_down = _moe_inputs(rng, B, T, d, f, E)
+    # Bias the router hard toward expert 0 to stress the buffer.
+    router_w = router_w.at[:, 0].add(10.0)
+    _, aux = moe_ffn(x, router_w, w_gate, w_up, w_down, top_k=2,
+                     capacity_factor=float(E), backend="dense")
+    assert float(aux["dropped_frac"]) == 0.0
+
+
+def test_tight_capacity_drops_and_grouped_does_not():
+    rng = np.random.default_rng(2)
+    B, T, d, f, E = 2, 16, 8, 16, 4
+    x, router_w, w_gate, w_up, w_down = _moe_inputs(rng, B, T, d, f, E)
+    router_w = router_w.at[:, 0].add(10.0)  # skewed routing
+    _, aux_d = moe_ffn(x, router_w, w_gate, w_up, w_down, top_k=2,
+                       capacity_factor=0.5, backend="dense")
+    assert float(aux_d["dropped_frac"]) > 0.0
+    out_g, aux_g = moe_ffn(x, router_w, w_gate, w_up, w_down, top_k=2,
+                           capacity_factor=0.5, backend="grouped",
+                           block_m=16, block_n=16)
+    assert float(aux_g["dropped_frac"]) == 0.0
+    # Drop-free reference: dense with unconstrained capacity.
+    out_ref, _ = moe_ffn(x, router_w, w_gate, w_up, w_down, top_k=2,
+                         capacity_factor=float(E), backend="dense")
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_padding_tokens_output_zero_and_use_no_capacity():
+    rng = np.random.default_rng(3)
+    B, T, d, f, E = 1, 16, 8, 16, 4
+    x, router_w, w_gate, w_up, w_down = _moe_inputs(rng, B, T, d, f, E)
+    v = np.ones((B, T), bool)
+    v[:, T // 2:] = False
+    valid = jnp.asarray(v)
+    for backend in ("dense", "grouped"):
+        out, aux = moe_ffn(x, router_w, w_gate, w_up, w_down, top_k=2,
+                           valid=valid, backend=backend,
+                           block_m=16, block_n=16)
+        assert np.allclose(np.asarray(out)[0, T // 2:], 0.0), backend
+        # expert_load counts only valid assignments.
+        np.testing.assert_allclose(float(np.asarray(aux["expert_load"]).sum()),
+                                   1.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_lb_loss_balanced_uniform_is_exactly_one(k):
+    """Regression pin: uniform router probs + perfectly uniform slot
+    usage give exactly 1.0 for ANY top-k (the loss counts all k slots
+    normalized by k, not just the top-1 choice)."""
+    E = 8
+    n = 64
+    probs = jnp.full((n, E), 1.0 / E)
+    # Round-robin assignment: every expert fills n*k/E slots.
+    gate_ids = jnp.asarray(
+        (np.arange(n * k).reshape(n, k) % E).astype(np.int32))
+    loss = router_load_balance_loss(probs, gate_ids, E, top_k=k)
+    assert float(loss) == 1.0
+
+
+def test_lb_loss_counts_all_topk_slots():
+    """A router whose 2nd choices all pile onto its favorite expert is
+    imbalanced even when the top-1 choices are uniform: the all-slots
+    loss must see it, while a top-1-only view scores it as balanced."""
+    E, n = 4, 64
+    p = np.full((n, E), 0.5 / (E - 1))
+    p[:, 0] = 0.5                         # router leans toward expert 0
+    probs = jnp.asarray(p)
+    top1 = np.arange(n) % E               # uniform first choices
+    second = np.full(n, 0)                # all second choices -> expert 0
+    second[top1 == 0] = 1                 # keep slots distinct per token
+    gate_ids = jnp.asarray(np.stack([top1, second], 1).astype(np.int32))
+    loss_all = router_load_balance_loss(probs, gate_ids, E)
+    loss_top1 = router_load_balance_loss(probs, gate_ids[:, :1], E)
+    # Top-1 slots alone look uniform; counting both slots exposes the
+    # pile-up on the favored expert.
+    np.testing.assert_allclose(float(loss_top1), 1.0, rtol=1e-6)
+    assert float(loss_all) > 1.0 + 1e-2
+
+
+def test_lb_loss_validates_topk():
+    probs = jnp.full((4, 2), 0.5)
+    ids = jnp.zeros((4, 2), jnp.int32)
+    with pytest.raises(ValueError):
+        router_load_balance_loss(probs, ids, 2, top_k=3)
+
+
+def test_expert_shard_plan_matches_heap_lpt():
+    """The chunked-exact LPT planner must reproduce the textbook heap
+    LPT greedy (same assignment on distinct loads, same shard loads)."""
+    rng = np.random.default_rng(4)
+    E, S = 40, 8
+    loads = rng.random(E)
+    assignment, shard_loads = expert_shard_plan(loads, S)
+
+    heap = [(0.0, s) for s in range(S)]
+    heapq.heapify(heap)
+    want = np.empty(E, np.int64)
+    for e in np.argsort(-loads, kind="stable"):
+        load, s = heapq.heappop(heap)
+        want[e] = s
+        heapq.heappush(heap, (load + loads[e], s))
+    np.testing.assert_array_equal(assignment, want)
+    ref_loads = np.zeros(S)
+    np.add.at(ref_loads, want, loads)
+    np.testing.assert_allclose(np.sort(shard_loads), np.sort(ref_loads),
+                               rtol=1e-12)
+    assert shard_loads.max() / loads.sum() * S < 1.35  # balanced-ish
+
+
+def test_expert_shard_plan_validates():
+    with pytest.raises(ValueError):
+        expert_shard_plan(np.ones((2, 2)), 2)
+    with pytest.raises(ValueError):
+        expert_shard_plan(np.ones(4), 0)

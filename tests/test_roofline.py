@@ -1,7 +1,8 @@
-"""Roofline extraction tests: HLO collective parsing + term analysis."""
+"""Roofline extraction tests: HLO collective parsing + term analysis +
+the named hardware presets."""
 import pytest
 
-from repro.launch.roofline import HW, analyze, collective_bytes
+from repro.launch.roofline import HW, HW_PRESETS, analyze, collective_bytes, get_hw
 
 HLO_SAMPLE = """
 HloModule jit_step
@@ -67,3 +68,23 @@ def test_analyze_zero_flops_safe():
                   cost={"flops": 0.0, "bytes accessed": 0.0}, hlo_text="",
                   memory={}, model_flops_global=1.0)
     assert rep.useful_ratio == 0.0
+
+
+def test_get_hw_presets(monkeypatch):
+    monkeypatch.delenv("REPRO_HW", raising=False)
+    assert get_hw().name == "v5e"  # historical default
+    for name, hw in HW_PRESETS.items():
+        got = get_hw(name)
+        assert got.name == name and got.peak_flops == hw.peak_flops
+    # chips override rides along without mutating the preset.
+    assert get_hw("v4", chips=64).chips == 64
+    assert get_hw("v4").chips == HW_PRESETS["v4"].chips  # preset untouched
+
+
+def test_get_hw_env_and_errors(monkeypatch):
+    monkeypatch.setenv("REPRO_HW", "v5p")
+    assert get_hw().name == "v5p"
+    # Explicit argument beats the env var.
+    assert get_hw("v6e").name == "v6e"
+    with pytest.raises(ValueError):
+        get_hw("tpu9000")
