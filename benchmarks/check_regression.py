@@ -102,6 +102,12 @@ METRICS = [
     Metric("BENCH_kernels", "autotune_best_speedup",
            lambda d: float(d["headline"]["autotune_best_speedup"]),
            rel_tol=1.0, abs_floor=1.0),
+    # Observability must stay effectively free: efficiency is
+    # 1 - obs_cost / (2%-budget reference step), floored at the <2%
+    # overhead contract (see benchmarks/observability_overhead.py).
+    Metric("BENCH_observability", "metrics_efficiency",
+           lambda d: float(d["headline"]["metrics_efficiency"]),
+           rel_tol=0.02, abs_floor=0.98),
 ]
 
 FLAGS = [
@@ -119,6 +125,8 @@ FLAGS = [
          lambda d: all(r["parity_max_err"] < 1e-4
                        and r["grad_parity_max_err"] < 1e-4
                        for r in d["ssm"])),
+    Flag("BENCH_observability", "exports_valid",
+         lambda d: bool(d["headline"]["exports_valid"])),
 ]
 
 

@@ -8,6 +8,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.orchestrator import MLLMGlobalOrchestrator
 from repro.data.synthetic import TaskMix, sample_examples
+from repro.obs.ledger import simulated_mfu
 
 
 def sample_instances(rng, d, per, modalities=("vision", "audio")):
@@ -25,11 +26,10 @@ def timed(fn, *args, repeat=3, **kw):
 
 
 def simulated_iteration_utilization(report) -> float:
-    """Paper's MFU proxy: one iteration's useful/straggler time over all
-    phases (each phase synchronizes across DP, so phase time = max cost)."""
-    total_max = sum(report.phase_max_cost.values())
-    total_mean = sum(float(np.mean(c)) for c in report.phase_costs.values())
-    return total_mean / total_max if total_max else 1.0
+    """Paper's MFU proxy -- now just the ledger's canonical formula
+    (:func:`repro.obs.ledger.simulated_mfu`) applied to the report's
+    phase cost vectors; kept as a named alias for existing callers."""
+    return simulated_mfu(report.phase_costs)
 
 
 def orchestrate(arch, d, per, *, balance=True, balance_encoders=True,

@@ -163,9 +163,24 @@ class MLLMGlobalOrchestrator:
         backend: str = "vectorized",
         concurrent_dispatch: bool = False,
         adaptive=None,
+        metrics=None,
     ) -> None:
         self.cfg = cfg
         self.d = d
+        # Observability: an optional MetricsRegistry (repro.obs.registry)
+        # receives per-phase solve-time histograms and plan/replan
+        # counters.  None keeps the orchestrator dependency-free; the
+        # StepLedger still gets everything via OrchestratorReport.
+        self.metrics = metrics
+        if metrics is not None:
+            self._h_solve = metrics.histogram(
+                "orch_plan_solve_ms", "dispatcher solve time per phase",
+                labels=("phase",))
+            self._c_plans = metrics.counter(
+                "orch_plans", "phase-plan solves by mode",
+                labels=("mode",))
+        else:
+            self._h_solve = self._c_plans = None
         self.vocab = vocab or cfg.vocab_size
         self.data_seed = 0
         self.instances_per_node = instances_per_node
@@ -347,6 +362,9 @@ class MLLMGlobalOrchestrator:
         phase_ms["compose"] = (time.perf_counter() - tc) * 1e3
         if self.adaptive is not None:
             self.adaptive.record_plan_spans(phase_ms)
+        if self._h_solve is not None:
+            for name, ms in phase_ms.items():
+                self._h_solve.observe(ms, phase=name)
         return PhasePlans(
             llm_plan=llm_plan,
             enc_plans=enc_plans,
@@ -404,6 +422,8 @@ class MLLMGlobalOrchestrator:
             replanned = True
             overlapped = False
             self.replans += 1
+            if self._c_plans is not None:
+                self._c_plans.inc(mode="replanned")
         if plans is None:
             t_replan = time.perf_counter()
             plans = self.plan_phases(examples_per_instance, caps)
@@ -442,6 +462,8 @@ class MLLMGlobalOrchestrator:
         report.phase_features = plans.features
         report.coeff_version = plans.coeff_version
         report.replanned = replanned
+        if self._c_plans is not None:
+            self._c_plans.inc(mode="overlapped" if overlapped else "sync")
         return batch, report
 
     # ------------------------------------------------------------------

@@ -86,6 +86,28 @@ def _save_cache(path: str, data: dict) -> None:
     os.replace(tmp, path)
 
 
+_GET_REGISTRY = None
+
+
+def _count_resolve(kernel: str, outcome: str) -> None:
+    """Count resolve outcomes (override/disabled/hit/miss) in the obs
+    registry.  Lazy import: kernels must not depend on obs at import
+    time, and the counter costs one dict hit per *trace*, not per step.
+    Re-fetched from the process default registry each call so a test
+    that swaps registries sees its own counts."""
+    global _GET_REGISTRY
+    if _GET_REGISTRY is None:
+        try:
+            from repro.obs.registry import get_registry
+            _GET_REGISTRY = get_registry
+        except Exception:
+            _GET_REGISTRY = False  # obs unavailable: stay silent
+    if _GET_REGISTRY:
+        _GET_REGISTRY().counter(
+            "kernel_autotune_resolves", "autotune block lookups by outcome",
+            labels=("kernel", "outcome")).inc(kernel=kernel, outcome=outcome)
+
+
 def _env_override(kernel: str) -> tuple[int, ...] | None:
     """REPRO_KERNEL_BLOCKS="flash=256x128,scan=128x64,grouped=128x128":
     an explicit pin that beats both the cache and the defaults."""
@@ -113,13 +135,17 @@ def resolve(
     cached tuning winner > ``default``.  Never measures."""
     override = _env_override(kernel)
     if override is not None:
+        _count_resolve(kernel, "override")
         return override
     if not enabled:
+        _count_resolve(kernel, "disabled")
         return default
     entry = _load_cache(cache_path or default_cache_path()).get(
         cache_key(kernel, key))
     if entry is None:
+        _count_resolve(kernel, "miss")
         return default
+    _count_resolve(kernel, "hit")
     return tuple(int(b) for b in entry["blocks"])
 
 

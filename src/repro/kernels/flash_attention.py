@@ -88,6 +88,7 @@ __all__ = [
     "tile_stats",
     "live_tile_mask",
     "count_live_tiles",
+    "tile_skip_fraction",
 ]
 
 
@@ -149,6 +150,19 @@ def count_live_tiles(
     live = live_tile_mask(q_seg, kv_seg, q_pos, kv_pos, block_q=block_q,
                           block_kv=block_kv, causal=causal, window=window)
     return int(jnp.sum(live)), int(np.prod(live.shape))
+
+
+def tile_skip_fraction(
+    q_seg, kv_seg, q_pos, kv_pos, *, block_q, block_kv, causal, window
+) -> float:
+    """Fraction of (Q tile, KV tile) grid cells the kernel skips on this
+    batch -- the observability counterpart of :func:`count_live_tiles`.
+    Host-side and data-dependent, so sample it at flush intervals (the
+    ledger does), never inside the traced step."""
+    visited, total = count_live_tiles(
+        q_seg, kv_seg, q_pos, kv_pos, block_q=block_q, block_kv=block_kv,
+        causal=causal, window=window)
+    return 1.0 - visited / total if total else 0.0
 
 
 # ----------------------------------------------------------------------

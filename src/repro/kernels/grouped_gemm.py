@@ -40,7 +40,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["grouped_matmul", "count_live_group_tiles"]
+__all__ = ["grouped_matmul", "count_live_group_tiles",
+           "group_tile_skip_fraction"]
 
 
 def _row_mask(tile_start, bm, start, end):
@@ -216,3 +217,17 @@ def count_live_group_tiles(group_sizes, block_m: int) -> int:
             continue
         live += (offs[e + 1] - 1) // block_m - offs[e] // block_m + 1
     return int(live)
+
+
+def group_tile_skip_fraction(group_sizes, block_m: int) -> float:
+    """Fraction of the dense ``n_m_tiles * E`` grid that holds no rows
+    for its expert -- cells the kernel's live-tile test skips.  Pure
+    host numpy over the routing counts; cheap enough to sample per step
+    from the already-host-fetched MoE metrics."""
+    sizes = np.asarray(group_sizes, np.int64)
+    total_rows = int(sizes.sum())
+    if total_rows == 0 or len(sizes) == 0:
+        return 0.0
+    n_m = -(-total_rows // block_m)  # ceil
+    total = n_m * len(sizes)
+    return 1.0 - count_live_group_tiles(sizes, block_m) / total if total else 0.0

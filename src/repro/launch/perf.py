@@ -114,6 +114,13 @@ def show(row, base=None):
     terms = {k: row[k] for k in ("compute_s", "memory_s", "collective_s")}
     line = "  " + "  ".join(f"{k[:-2]}={v:8.3f}s" for k, v in terms.items())
     line += f"  dominant={row['dominant']}  useful={row['useful_ratio']:.3f}"
+    # Cached rows predate the ledger-projected MFU; recompute on the fly
+    # so old experiment files display it too (same canonical formula).
+    mfu = row.get("mfu_projected")
+    if mfu is None:
+        from repro.obs.ledger import projected_mfu
+        mfu = projected_mfu(row["useful_ratio"], *terms.values())
+    line += f"  mfu_proj={mfu:.3f}"
     if row.get("coeff_lam_ratio") is not None:
         line += (f"  lam(cal/ana)={row['coeff_lam_ratio']:.2f}x"
                  f" [{row['coeff_lam_calibrated']:.2e} vs"

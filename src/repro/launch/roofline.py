@@ -25,6 +25,8 @@ import os
 import re
 from typing import Any
 
+from repro.obs.ledger import projected_mfu, useful_flops_ratio
+
 __all__ = ["HW", "HW_PRESETS", "get_hw", "RooflineReport",
            "collective_bytes", "analyze"]
 
@@ -130,6 +132,9 @@ class RooflineReport:
     model_flops_global: float
     useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
     memory_per_device: dict[str, Any]
+    # Roofline-projected MFU (ledger canonical formula): useful_ratio
+    # discounted by the compute fraction of the serial roofline sum.
+    mfu_projected: float = 0.0
 
     def row(self) -> dict[str, Any]:
         return dataclasses.asdict(self)
@@ -154,7 +159,9 @@ def analyze(
     collective_s = coll["total"] / hw.ici_bw
     terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
     dominant = max(terms, key=terms.get)
-    useful = model_flops_global / (flops * hw.chips) if flops else 0.0
+    # Canonical formula lives in the obs ledger (single source of truth
+    # with the training-loop accounting).
+    useful = useful_flops_ratio(model_flops_global, flops, hw.chips)
     return RooflineReport(
         arch=arch,
         shape=shape,
@@ -170,4 +177,5 @@ def analyze(
         model_flops_global=model_flops_global,
         useful_ratio=useful,
         memory_per_device=memory,
+        mfu_projected=projected_mfu(useful, compute_s, memory_s, collective_s),
     )

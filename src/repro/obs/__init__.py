@@ -1,0 +1,47 @@
+"""Unified observability plane: registry, ledger, exporters, timeline.
+
+Dependency-free (numpy + stdlib) metrics subsystem:
+
+  * :mod:`repro.obs.registry` -- named Counters/Gauges/Histograms with
+    ``(phase, shard, modality)``-style labels and a Greenwald-Khanna
+    streaming quantile sketch behind every histogram.
+  * :mod:`repro.obs.ledger` -- the canonical MFU / goodput / straggler /
+    imbalance formulas and the per-step :class:`StepLedger`.
+  * :mod:`repro.obs.export` -- atomic OpenMetrics textfile, crash-safe
+    JSONL flight recorder, and the alert bridge.
+  * :mod:`repro.obs.timeline` -- one merged Perfetto timeline across
+    orchestrator spans, engine step rows, and counter tracks.
+"""
+from repro.obs.export import (AlertBridge, FlightRecorder, read_flight_record,
+                              render_openmetrics, write_openmetrics)
+from repro.obs.ledger import (StepLedger, goodput_fraction, hw_mfu,
+                              phase_imbalance, projected_mfu, simulated_mfu,
+                              straggler_overhead, useful_flops_ratio)
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                QuantileSketch, get_registry, set_registry)
+from repro.obs.timeline import build_timeline, export_timeline
+
+__all__ = [
+    "AlertBridge",
+    "Counter",
+    "FlightRecorder",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "QuantileSketch",
+    "StepLedger",
+    "build_timeline",
+    "export_timeline",
+    "get_registry",
+    "goodput_fraction",
+    "hw_mfu",
+    "phase_imbalance",
+    "projected_mfu",
+    "read_flight_record",
+    "render_openmetrics",
+    "set_registry",
+    "simulated_mfu",
+    "straggler_overhead",
+    "useful_flops_ratio",
+    "write_openmetrics",
+]

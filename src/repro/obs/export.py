@@ -1,0 +1,240 @@
+"""Exporters: OpenMetrics textfile + JSONL flight recorder + alerts.
+
+Both exporters are crash-oriented:
+
+  * :func:`write_openmetrics` renders the whole registry to a
+    Prometheus/OpenMetrics text exposition and installs it with
+    ``tmp + os.replace`` -- a scraper (or a human) never sees a torn
+    file, and a crashed run keeps its last complete snapshot.
+  * :class:`FlightRecorder` appends structured JSONL events.  Events
+    buffer in memory; ``flush()`` is a single ``write`` of the joined
+    lines followed by ``fsync``, so after SIGKILL the file is valid
+    JSONL up to the last flush (at worst one torn trailing line, which
+    :func:`read_flight_record` tolerates).
+
+:class:`AlertBridge` is the thin routing layer that turns the repo's
+existing health signals -- CUSUM drift flags from
+``telemetry/adaptive.py``, checkpoint corruption fallbacks, engine
+preemption storms, ``moe_dropped_frac`` spikes and stale-plan replans
+from the ledger -- into flight-recorder ``alert`` events plus an
+``alerts_total{kind=...}`` counter.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import IO, Mapping
+
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                get_registry)
+
+__all__ = [
+    "AlertBridge",
+    "FlightRecorder",
+    "read_flight_record",
+    "render_openmetrics",
+    "write_openmetrics",
+]
+
+
+# ----------------------------------------------------------------------
+# OpenMetrics text exposition.
+# ----------------------------------------------------------------------
+def _fmt_value(v: float) -> str:
+    if v != v:  # NaN
+        return "NaN"
+    if v == float("inf"):
+        return "+Inf"
+    if v == float("-inf"):
+        return "-Inf"
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def _fmt_labels(labels: Mapping[str, str], extra: Mapping[str, str] = ()) -> str:
+    items = list(labels.items()) + list(dict(extra).items())
+    if not items:
+        return ""
+    body = ",".join(
+        '%s="%s"' % (k, str(v).replace("\\", "\\\\").replace('"', '\\"')
+                     .replace("\n", "\\n"))
+        for k, v in items)
+    return "{" + body + "}"
+
+
+def render_openmetrics(registry: MetricsRegistry | None = None) -> str:
+    """Render every family in the registry as Prometheus text format.
+
+    Counters get a ``_total`` suffix; histograms expand into cumulative
+    ``_bucket{le=...}`` series plus ``_sum``/``_count`` and sketch-backed
+    ``_p50/_p95/_p99`` gauges (percentiles are not part of the exposition
+    format proper, but are the whole point of carrying the sketch).
+    """
+    registry = registry if registry is not None else get_registry()
+    lines: list[str] = []
+    for fam in registry.families():
+        if fam.kind == "counter":
+            name, ptype = fam.name + "_total", "counter"
+        else:
+            name, ptype = fam.name, fam.kind
+        lines.append(f"# HELP {name} {fam.help}")
+        lines.append(f"# TYPE {name} {ptype}")
+        for labels, child in fam.children():
+            if isinstance(child, (Counter, Gauge)):
+                lines.append(f"{name}{_fmt_labels(labels)} "
+                             f"{_fmt_value(child.value)}")
+            elif isinstance(child, Histogram):
+                for le, cum in child.bucket_counts():
+                    lines.append(
+                        f"{name}_bucket"
+                        f"{_fmt_labels(labels, {'le': _fmt_value(le)})} {cum}")
+                lines.append(f"{name}_sum{_fmt_labels(labels)} "
+                             f"{_fmt_value(child.sum)}")
+                lines.append(f"{name}_count{_fmt_labels(labels)} {child.count}")
+                if child.count:
+                    for q, suffix in ((0.5, "p50"), (0.95, "p95"), (0.99, "p99")):
+                        lines.append(
+                            f"{name}_{suffix}{_fmt_labels(labels)} "
+                            f"{_fmt_value(child.quantile(q))}")
+    lines.append("# EOF")
+    return "\n".join(lines) + "\n"
+
+
+def write_openmetrics(path: str, registry: MetricsRegistry | None = None) -> str:
+    """Atomically install the rendered exposition at ``path``."""
+    text = render_openmetrics(registry)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+# ----------------------------------------------------------------------
+# JSONL flight recorder.
+# ----------------------------------------------------------------------
+class FlightRecorder:
+    """Append-only JSONL event log with atomic-ish buffered flushes.
+
+    The first line is always a ``meta`` event carrying run metadata, so
+    a flight record is self-describing even when found orphaned on disk.
+    """
+
+    def __init__(self, path: str, *, meta: Mapping | None = None,
+                 flush_every: int = 64) -> None:
+        self.path = path
+        self.flush_every = max(1, int(flush_every))
+        self._buf: list[str] = []
+        self._f: IO[str] = open(path, "a")
+        self.events_written = 0
+        self.record("meta", **dict(meta or {}))
+        self.flush()
+
+    def record(self, kind: str, **fields) -> dict:
+        event = {"kind": kind, "ts": time.time(), **fields}
+        self._buf.append(json.dumps(event, default=str))
+        if len(self._buf) >= self.flush_every:
+            self.flush()
+        return event
+
+    def flush(self) -> None:
+        """One write + fsync: readers see whole lines or nothing new."""
+        if not self._buf:
+            return
+        blob = "\n".join(self._buf) + "\n"
+        self._buf.clear()
+        self._f.write(blob)
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self.events_written += blob.count("\n")
+
+    def close(self) -> None:
+        self.flush()
+        self._f.close()
+
+    def __enter__(self) -> "FlightRecorder":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_flight_record(path: str) -> list[dict]:
+    """Parse a flight record, tolerating one torn trailing line.
+
+    A line that fails to parse is only acceptable at the very end of the
+    file (a crash mid-write of the final buffer); anywhere else it is
+    real corruption and raises.
+    """
+    events: list[dict] = []
+    with open(path) as f:
+        raw = f.read()
+    lines = raw.split("\n")
+    # Trailing "" after a final newline is normal.
+    if lines and lines[-1] == "":
+        lines.pop()
+    for i, line in enumerate(lines):
+        try:
+            events.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                break  # torn tail from a crash mid-write: drop it
+            raise ValueError(f"{path}: corrupt flight record at line {i + 1}")
+    return events
+
+
+# ----------------------------------------------------------------------
+# Alert routing.
+# ----------------------------------------------------------------------
+class AlertBridge:
+    """Route existing health signals into flight-recorder alerts.
+
+    Detection stays where it already lives (CUSUM in
+    ``telemetry/adaptive.py``, fallback logic in ``checkpoint/``, the
+    ledger's spike checks); this class only normalizes the events and
+    counts them per kind.
+    """
+
+    PREEMPTION_STORM = 3  # preemptions within one window => storm
+
+    def __init__(self, recorder: FlightRecorder | None,
+                 registry: MetricsRegistry | None = None) -> None:
+        self.recorder = recorder
+        registry = registry if registry is not None else get_registry()
+        self._c_alerts = registry.counter(
+            "alerts", "structured alert events routed to the flight recorder",
+            labels=("alert",))
+        self.alerts: list[dict] = []
+
+    def emit(self, alert: str, **fields) -> dict:
+        self._c_alerts.inc(alert=alert)
+        event = {"alert": alert, **fields}
+        self.alerts.append(event)
+        if self.recorder is not None:
+            self.recorder.record("alert", **event)
+        return event
+
+    # -- adapters for the repo's existing signal shapes ----------------
+    def on_drift(self, drift_flags: Mapping[str, bool], step: int) -> None:
+        """CUSUM drift flags from ``AdaptiveOrchestration.observe``."""
+        for phase, drifted in drift_flags.items():
+            if drifted:
+                self.emit("cost_model_drift", phase=phase, step=step)
+
+    def on_checkpoint_fallback(self, corrupt_path: str, restored_step) -> None:
+        self.emit("checkpoint_corruption_fallback", corrupt_path=corrupt_path,
+                  restored_step=restored_step)
+
+    def on_preemptions(self, n_preempted: int, step: int) -> None:
+        if n_preempted >= self.PREEMPTION_STORM:
+            self.emit("preemption_storm", n_preempted=n_preempted, step=step)
+
+    def on_ledger_events(self, events) -> None:
+        """Alerts the :class:`StepLedger` detected (drop spikes, replans)."""
+        for ev in events:
+            ev = dict(ev)
+            self.emit(ev.pop("alert"), **ev)

@@ -1,0 +1,112 @@
+"""One unified Perfetto timeline across orchestrator, engine, kernels.
+
+PR 4's :meth:`TraceBuffer.to_chrome_trace` draws the orchestrator's
+exec/plan spans; the serving engine separately keeps ``StepTiming``
+rows; kernel hooks count autotune hits and tile skips.  Until now each
+lived in its own export.  :func:`build_timeline` merges all three into
+a single Chrome-trace / Perfetto JSON object (open in
+``ui.perfetto.dev``):
+
+  * orchestrator phase spans -- pid per phase, tid per DP shard (the
+    existing TraceBuffer layout, reused verbatim);
+  * engine step rows -- one pid per replica, schedule/prefill/decode as
+    back-to-back "X" spans per step on tids 0/1/2;
+  * counter tracks -- "C" events from the :class:`StepLedger`'s
+    ``(step, value)`` series (MFU, goodput, per-phase imbalance, kernel
+    hit/skip counters), placed on the step axis using the ledger's
+    cumulative step wall clock so counters line up with the spans.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, Mapping, Sequence
+
+__all__ = ["build_timeline", "export_timeline"]
+
+# pid blocks so the three sources never collide.
+_ENGINE_PID_BASE = 1000
+_COUNTER_PID = 9000
+
+
+def _engine_events(step_timings: Iterable, replica: int = 0) -> list[dict]:
+    """StepTiming rows -> back-to-back spans, one tid per engine phase."""
+    pid = _ENGINE_PID_BASE + replica
+    events: list[dict] = [
+        {"name": "process_name", "ph": "M", "pid": pid,
+         "args": {"name": f"engine:replica{replica}"}}]
+    for tid, name in enumerate(("schedule", "prefill", "decode")):
+        events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                       "tid": tid, "args": {"name": name}})
+    cursor = 0.0
+    for t in step_timings:
+        parts = (("schedule", 0, t.schedule_ms,
+                  {"step": t.step}),
+                 ("prefill", 1, t.prefill_ms,
+                  {"step": t.step, "n_seqs": t.n_prefill_seqs,
+                   "tokens": t.prefill_tokens}),
+                 ("decode", 2, t.decode_ms,
+                  {"step": t.step, "n_seqs": t.n_decode_seqs}))
+        ts = cursor
+        for name, tid, dur_ms, args in parts:
+            events.append({"name": name, "cat": "engine", "ph": "X",
+                           "pid": pid, "tid": tid, "ts": ts * 1e3,
+                           "dur": dur_ms * 1e3, "args": args})
+            ts += dur_ms
+        cursor = ts
+    return events
+
+
+def _counter_events(series: Mapping[str, Sequence[tuple[int, float]]],
+                    step_ts_ms: Mapping[int, float] | None = None,
+                    ) -> list[dict]:
+    """Ledger ``(step, value)`` series -> Perfetto "C" counter tracks.
+
+    When the ledger recorded a cumulative wall clock per step, counters
+    land at real timestamps; otherwise the step index is the time axis
+    (1 step = 1 ms), which still shows the *shape* of every series.
+    """
+    events: list[dict] = [
+        {"name": "process_name", "ph": "M", "pid": _COUNTER_PID,
+         "args": {"name": "counters"}}]
+    for name, points in sorted(series.items()):
+        for step, value in points:
+            if step_ts_ms and step in step_ts_ms:
+                ts = step_ts_ms[step]
+            else:
+                ts = float(step)
+            events.append({"name": name, "ph": "C", "pid": _COUNTER_PID,
+                           "ts": ts * 1e3, "args": {name: value}})
+    return events
+
+
+def build_timeline(*, trace_buffer=None, step_timings=None, ledger=None,
+                   series: Mapping[str, Sequence[tuple[int, float]]] | None = None,
+                   ) -> dict:
+    """Merge every available source into one Chrome-trace JSON object.
+
+    All arguments are optional, so each subsystem can be absent (a
+    train-only run has no engine rows; a serving-only run has no
+    orchestrator spans).
+    """
+    events: list[dict] = []
+    if trace_buffer is not None:
+        events.extend(trace_buffer.to_chrome_trace()["traceEvents"])
+    if step_timings is not None:
+        events.extend(_engine_events(step_timings))
+    merged_series: dict[str, Sequence[tuple[int, float]]] = {}
+    step_ts = None
+    if ledger is not None:
+        merged_series.update(ledger.series)
+        step_ts = ledger.step_ts_ms
+    if series:
+        merged_series.update(series)
+    if merged_series:
+        events.extend(_counter_events(merged_series, step_ts))
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def export_timeline(path: str, **kwargs) -> str:
+    """Build and write the unified timeline JSON; returns ``path``."""
+    with open(path, "w") as f:
+        json.dump(build_timeline(**kwargs), f)
+    return path

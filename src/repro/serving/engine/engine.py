@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.configs.base import EngineConfig, ModelConfig
 from repro.core.cost_model import ServingCostModel
+from repro.obs.registry import QuantileSketch
 from repro.serving.engine.kv_pool import PagedKVPool
 from repro.serving.engine.request import Request, RequestState, SequenceState
 from repro.serving.engine.scheduler import (
@@ -99,6 +100,14 @@ class EngineReport:
     occupancy_mean: float  # KV-pool block occupancy, sampled per step
     occupancy_max: float
     budget_util_mean: float  # budget_used / token_budget per step
+    # Sketch-backed tail latencies (Greenwald-Khanna, repro.obs.registry):
+    # means alone hide preemption-induced tails -- a preempted request
+    # re-prefills its whole context, which shows up only at p95/p99.
+    ttft_steps_p50: float = 0.0
+    ttft_steps_p99: float = 0.0
+    itl_steps_p50: float = 0.0
+    itl_steps_p95: float = 0.0
+    itl_steps_p99: float = 0.0
     # Phase-level wall-time breakdown (sums over steps; the per-step
     # rows live in ``Engine.step_timings``).  prefill_ms_mean /
     # decode_ms_mean average over the steps that RAN that phase.
@@ -120,8 +129,12 @@ class EngineReport:
             f"{self.token_slots} compute slots "
             f"({self.slot_efficiency:.1%} useful)\n"
             f"latency  TTFT {self.ttft_steps_mean:.1f} steps mean / "
-            f"{self.ttft_steps_p95:.1f} p95 ({self.ttft_s_mean * 1e3:.1f} ms); "
-            f"ITL {self.itl_steps_mean:.2f} steps\n"
+            f"{self.ttft_steps_p50:.1f}/{self.ttft_steps_p95:.1f}/"
+            f"{self.ttft_steps_p99:.1f} p50/p95/p99 "
+            f"({self.ttft_s_mean * 1e3:.1f} ms); "
+            f"ITL {self.itl_steps_mean:.2f} steps mean / "
+            f"{self.itl_steps_p50:.2f}/{self.itl_steps_p95:.2f}/"
+            f"{self.itl_steps_p99:.2f} p50/p95/p99\n"
             f"pool     occupancy {self.occupancy_mean:.1%} mean / "
             f"{self.occupancy_max:.1%} max; budget {self.budget_util_mean:.1%}\n"
             f"phases   prefill {self.prefill_s_total * 1e3:.1f} ms over "
@@ -131,8 +144,15 @@ class EngineReport:
         )
 
 
-def _percentile(xs: Sequence[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if len(xs) else 0.0
+def _sketch_quantiles(xs: Sequence[float], qs: Sequence[float]) -> list[float]:
+    """Percentiles via the streaming sketch (the same estimator the live
+    registry histograms use, so report numbers match scraped metrics).
+    Monotone in q by construction."""
+    if not len(xs):
+        return [0.0] * len(qs)
+    sk = QuantileSketch()
+    sk.extend(float(x) for x in xs)
+    return [sk.quantile(q) for q in qs]
 
 
 def build_report(requests: Sequence[Request], *, n_steps: int, wall_s: float,
@@ -154,6 +174,9 @@ def build_report(requests: Sequence[Request], *, n_steps: int, wall_s: float,
     useful = prompt_tokens + generated_tokens
     pf = [t for t in step_timings if t.n_prefill_seqs]
     dc = [t for t in step_timings if t.n_decode_seqs]
+    ttft_p50, ttft_p95, ttft_p99 = _sketch_quantiles(
+        ttft_steps, (0.5, 0.95, 0.99))
+    itl_p50, itl_p95, itl_p99 = _sketch_quantiles(itl, (0.5, 0.95, 0.99))
     return EngineReport(
         n_requests=len(requests),
         n_finished=len(finished),
@@ -167,9 +190,14 @@ def build_report(requests: Sequence[Request], *, n_steps: int, wall_s: float,
         token_slots=token_slots,
         slot_efficiency=useful / token_slots if token_slots else 0.0,
         ttft_steps_mean=float(np.mean(ttft_steps)) if ttft_steps else 0.0,
-        ttft_steps_p95=_percentile(ttft_steps, 95),
+        ttft_steps_p95=ttft_p95,
         ttft_s_mean=float(np.mean(ttft_s)) if ttft_s else 0.0,
         itl_steps_mean=float(np.mean(itl)) if itl else 0.0,
+        ttft_steps_p50=ttft_p50,
+        ttft_steps_p99=ttft_p99,
+        itl_steps_p50=itl_p50,
+        itl_steps_p95=itl_p95,
+        itl_steps_p99=itl_p99,
         occupancy_mean=float(np.mean(occupancy_samples)) if len(occupancy_samples) else 0.0,
         occupancy_max=float(np.max(occupancy_samples)) if len(occupancy_samples) else 0.0,
         budget_util_mean=float(np.mean(budget_fracs)) if len(budget_fracs) else 0.0,
@@ -192,7 +220,8 @@ class Engine:
                  rng_key=None,
                  cost_model: ServingCostModel | None = None,
                  replica_id: int = 0,
-                 jit_steps: tuple | None = None):
+                 jit_steps: tuple | None = None,
+                 metrics=None):
         if cfg.family not in ("dense", "moe", "vlm"):
             raise ValueError(
                 f"engine serves dense/moe/vlm families, not {cfg.family!r}")
@@ -252,6 +281,29 @@ class Engine:
         self.occupancy_samples: list[float] = []
         self.budget_fracs: list[float] = []
         self._wall_s = 0.0
+        # Observability: an optional MetricsRegistry (repro.obs.registry)
+        # receives the SLO series live -- TTFT / per-request ITL / pool
+        # occupancy as replica-labeled histograms whose sketch gives the
+        # same p50/p95/p99 the end-of-run EngineReport computes.
+        self.metrics = metrics
+        if metrics is not None:
+            step_buckets = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+            self._h_ttft = metrics.histogram(
+                "serving_ttft_steps", "arrival to first token, engine steps",
+                labels=("replica",), buckets=step_buckets)
+            self._h_itl = metrics.histogram(
+                "serving_itl_steps", "per-request mean inter-token steps",
+                labels=("replica",), buckets=step_buckets)
+            self._h_occ = metrics.histogram(
+                "serving_occupancy_frac", "KV-pool block occupancy per step",
+                labels=("replica",),
+                buckets=tuple(i / 10 for i in range(1, 11)))
+            self._c_preempt = metrics.counter(
+                "serving_preemptions", "sequences preempted by the scheduler",
+                labels=("replica",))
+            self._n_preempt_seen = 0
+        else:
+            self._h_ttft = self._h_itl = self._h_occ = self._c_preempt = None
 
     # ------------------------------------------------------------------
     @property
@@ -307,6 +359,13 @@ class Engine:
         self.occupancy_samples.append(self.pool.occupancy)
         self.budget_fracs.append(plan.budget_used / plan.budget)
         self._wall_s += time.perf_counter() - t0
+        if self._h_occ is not None:
+            self._h_occ.observe(self.pool.occupancy, replica=self.replica_id)
+            n_pre = sum(r.n_preemptions for r in self.requests)
+            if n_pre > self._n_preempt_seen:
+                self._c_preempt.inc(n_pre - self._n_preempt_seen,
+                                    replica=self.replica_id)
+                self._n_preempt_seen = n_pre
         return plan
 
     def _prefill_groups(self, seqs: list[SequenceState],
@@ -432,10 +491,20 @@ class Engine:
 
     def _deliver(self, seq: SequenceState, token: int, step: int, now: float) -> None:
         seq.last_token = token
-        seq.request.record_token(token, step, now)
+        req = seq.request
+        first = req.first_token_step is None
+        req.record_token(token, step, now)
         self.generated_tokens += 1
-        if seq.request.done:
-            seq.request.finish(step, now)
+        if first and self._h_ttft is not None:
+            self._h_ttft.observe(step - req.arrival_step,
+                                 replica=self.replica_id)
+        if req.done:
+            req.finish(step, now)
+            if (self._h_itl is not None and len(req.output_tokens) > 1
+                    and req.finish_step is not None):
+                itl = ((req.finish_step - req.first_token_step)
+                       / (len(req.output_tokens) - 1))
+                self._h_itl.observe(itl, replica=self.replica_id)
             self.pool.free(seq.seq_id)
             self.running.remove(seq)
 

@@ -16,12 +16,28 @@ from repro.models.model import forward
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 
 __all__ = [
+    "METRIC_HELP",
     "check_opt_state",
     "make_exchange",
     "make_loss_fn",
     "make_train_step",
     "make_prefill_step",
 ]
+
+# Catalog of every key the train-step metrics dict can carry.  The
+# observability plane (repro.obs.ledger) republishes these host scalars
+# as ``train_metric{name=...}`` gauges; this mapping is the single place
+# their meaning is documented.
+METRIC_HELP = {
+    "loss": "mean next-token cross-entropy over supervised positions",
+    "aux_loss": "MoE load-balance auxiliary loss (0 for dense families)",
+    "tokens": "supervised positions in the step's global batch",
+    "moe_dropped_frac": "routed tokens dropped at expert capacity "
+                        "(0 on the drop-free grouped backend)",
+    "moe_max_expert_load": "largest per-expert load fraction "
+                           "(1/n_experts = perfectly balanced routing)",
+    "grad_norm": "global gradient L2 norm",
+}
 
 # The optimizer-state contract ``make_train_step`` / ``adamw_update``
 # expect -- and what a checkpoint must therefore carry.  Kept next to

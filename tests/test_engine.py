@@ -206,10 +206,42 @@ def test_engine_report_metrics_consistent():
     assert 0.0 <= report.occupancy_mean <= report.occupancy_max <= 1.0
     assert report.ttft_steps_mean >= 0.0
     assert report.itl_steps_mean >= 1.0  # one decode step per token min
+    # sketch-backed tail latencies: present and monotone in q
+    assert 0.0 <= report.ttft_steps_p50 <= report.ttft_steps_p95 \
+        <= report.ttft_steps_p99
+    assert 1.0 <= report.itl_steps_p50 <= report.itl_steps_p95 \
+        <= report.itl_steps_p99
     assert report.wall_s > 0 and report.throughput_tok_s > 0
     assert "finished" in report.summary()
     # Pool fully drained after the run.
     assert engine.pool.num_used == 0
+
+
+def test_engine_populates_metrics_registry():
+    """With a metrics registry attached, the engine's SLO histograms
+    (TTFT / ITL / occupancy) fill with labeled observations."""
+    from repro.obs import MetricsRegistry
+
+    cfg = _smoke("olmo_1b")
+    params = _params(cfg)
+    ecfg = EngineConfig(block_size=16, num_blocks=33, max_num_seqs=4,
+                        token_budget=96, max_model_len=64,
+                        prefill_pad=16, decode_pad=2)
+    reg = MetricsRegistry()
+    engine = Engine(cfg, ecfg, params, metrics=reg)
+    reqs = _trace(cfg, np.random.default_rng(4), 4)
+    report = engine.run(reqs, max_steps=300)
+    assert report.n_finished == 4
+
+    ttft = reg.get("serving_ttft_steps").labels(replica="0")
+    itl = reg.get("serving_itl_steps").labels(replica="0")
+    occ = reg.get("serving_occupancy_frac").labels(replica="0")
+    assert ttft.count == 4  # one TTFT observation per request
+    assert itl.count == 4  # one mean-ITL observation per finished request
+    assert occ.count == report.n_steps
+    # histogram quantiles agree with the report's sketch-backed tails
+    assert ttft.quantile(0.5) <= ttft.quantile(0.95) <= ttft.quantile(0.99)
+    assert report.ttft_steps_p95 >= report.ttft_steps_p50
 
 
 def test_engine_validation_errors():
