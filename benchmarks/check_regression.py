@@ -29,6 +29,12 @@ Metrics and their bands:
                                                by construction: abs floor
                                                only; kernel parity flags
                                                must hold
+  triage       triage_top1_accuracy            seeded fault injection:
+                                               >= 0.75 of scenarios name
+                                               the injected fault #1;
+                                               waterfall closure and live
+                                               /metrics validity flags
+                                               must hold
 
 Usage:
     python -m benchmarks.check_regression --fresh-dir /tmp
@@ -108,6 +114,11 @@ METRICS = [
     Metric("BENCH_observability", "metrics_efficiency",
            lambda d: float(d["headline"]["metrics_efficiency"]),
            rel_tol=0.02, abs_floor=0.98),
+    # Root-cause attribution: fraction of injected faults named as the
+    # #1 ranked triage cause (benchmarks/triage_accuracy.py).
+    Metric("BENCH_triage", "triage_top1_accuracy",
+           lambda d: float(d["headline"]["triage_top1_accuracy"]),
+           rel_tol=0.1, abs_floor=0.75),
 ]
 
 FLAGS = [
@@ -127,6 +138,14 @@ FLAGS = [
                        for r in d["ssm"])),
     Flag("BENCH_observability", "exports_valid",
          lambda d: bool(d["headline"]["exports_valid"])),
+    # Waterfall closure: on truthful-cost scenarios the unattributed
+    # residual stays <= 5% of the gap per step (cost-drift excluded by
+    # the benchmark -- blowing the residual up there is the detector).
+    Flag("BENCH_triage", "waterfall_closure_ok",
+         lambda d: bool(d["headline"]["waterfall_closure_ok"])),
+    # Live aggregated /metrics endpoint parses strictly across scrapes.
+    Flag("BENCH_triage", "metrics_endpoint_valid",
+         lambda d: bool(d["headline"]["metrics_endpoint_valid"])),
 ]
 
 

@@ -1,0 +1,304 @@
+"""Triage accuracy benchmark: does the attribution engine name the
+injected fault?
+
+Runs the full attribution pipeline -- :class:`repro.obs.GapWaterfall`
+per step, :class:`repro.obs.AnomalyMonitor` over the waterfall series,
+alert routing through :class:`repro.obs.AlertBridge`, ranked root-cause
+triage via :func:`repro.obs.triage` -- over a seeded pure-numpy step
+simulator, injecting ONE known fault per scenario at mid-run:
+
+  straggler_llm / straggler_vision   one shard's phase cost inflates
+  cost_drift                         step time moves, cost vectors don't
+                                     (+ CUSUM drift alerts)
+  moe_drop_spike                     moe_dropped_frac 0 -> 0.25
+  preemption_storm                   preemption recompute burns 15% of
+                                     the useful compute
+  dispatcher_exposed                 exposed plan latency 2ms -> 28ms
+  checkpoint_stall                   a 30ms save charged to every step
+  kernel_dead_tiles                  dead-tile fraction 0.02 -> 0.30
+
+Headline metrics (gated by ``benchmarks/check_regression.py``):
+
+  * ``triage_top1_accuracy`` -- fraction of scenarios whose #1 ranked
+    cause is the injected fault (gate: >= 0.75);
+  * ``waterfall_closure_ok`` -- max per-step closure error across every
+    scenario that keeps a truthful cost model stays <= 5% (the
+    cost-drift scenario is excluded: blowing up the unattributed
+    residual there is the *detection mechanism*, not an error);
+  * ``metrics_endpoint_valid`` -- a 3-DP-shard + 2-engine-replica
+    aggregated registry served live by :class:`repro.obs.MetricsServer`
+    passes the strict OpenMetrics parser on two consecutive scrapes
+    (``_total`` monotonicity included) and serves a JSON ``/triage``.
+
+    PYTHONPATH=src python -m benchmarks.triage_accuracy [--smoke] \
+        [--check] [--out BENCH_triage.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import urllib.request
+
+import numpy as np
+
+sys.path.insert(0, "src")  # allow `python -m benchmarks.triage_accuracy`
+
+from repro.obs import (AlertBridge, AnomalyMonitor, GapWaterfall,
+                       MetricsRegistry, MetricsServer, aggregate_registries,
+                       triage, validate_openmetrics)
+
+CLOSURE_GATE = 0.05
+
+# Healthy-regime constants: post-balanced cost vectors (1% shard noise),
+# a fixed true cost->ms scale the waterfall has to re-learn online.
+PHASE_BASE = {"vision": 800.0, "audio": 400.0, "llm": 3000.0}
+SCALE_MS_PER_COST = 0.02  # => ~86 ms compute per step
+EXPOSED_MS = 2.0
+DEAD_TILE_BASE = 0.02
+STEP_NOISE_MS = 0.08
+D = 4
+
+
+class SimReport:
+    """Duck-typed OrchestratorReport: just what the waterfall reads."""
+
+    def __init__(self, phase_costs, exposed_ms):
+        self.phase_costs = phase_costs
+        self.exposed_ms = exposed_ms
+
+
+def _healthy_costs(rng):
+    return {p: base * rng.normal(1.0, 0.01, size=D).clip(0.9, 1.1)
+            for p, base in PHASE_BASE.items()}
+
+
+def run_scenario(name, *, steps, fault_step, seed, mutate):
+    """Simulate one run; ``mutate(state, it)`` applies the fault to the
+    per-step state dict from ``fault_step`` on.  Returns the triage
+    report plus per-run closure stats."""
+    rng = np.random.default_rng(seed)
+    registry = MetricsRegistry()
+    alerts = AlertBridge(None, registry)
+    waterfall = GapWaterfall(registry=registry)
+    monitor = AnomalyMonitor(alerts=alerts, registry=registry)
+    for it in range(steps):
+        state = {
+            "costs": _healthy_costs(rng),
+            "exposed_ms": EXPOSED_MS,
+            "ckpt_ms": 0.0,
+            "dead_tile_frac": DEAD_TILE_BASE,
+            "recompute_frac": 0.0,
+            "moe_dropped_frac": 0.0,
+            "step_ms_extra": 0.0,  # unmodeled time (cost drift)
+        }
+        if it >= fault_step:
+            mutate(state, it, alerts)
+        sum_max = sum(float(np.max(c)) for c in state["costs"].values())
+        step_ms = (sum_max * SCALE_MS_PER_COST + state["exposed_ms"]
+                   + state["ckpt_ms"] + state["step_ms_extra"]
+                   + abs(rng.normal(0.0, STEP_NOISE_MS)))
+        report = SimReport(state["costs"], state["exposed_ms"])
+        waterfall.observe(
+            it, report=report, step_ms=step_ms,
+            metrics={"moe_dropped_frac": state["moe_dropped_frac"]},
+            ckpt_ms=state["ckpt_ms"],
+            dead_tile_frac=state["dead_tile_frac"],
+            recompute_frac=state["recompute_frac"])
+        monitor.poll(waterfall.series)
+    rep = triage([w.to_dict() for w in waterfall.history],
+                 anomalies=[a.to_dict() for a in monitor.anomalies],
+                 alerts=list(alerts.alerts),
+                 meta={"scenario": name})
+    closure = waterfall.closure()
+    return rep, closure
+
+
+def scenarios(steps, fault_step):
+    """(name, expected_cause, mutate) triples -- one injected fault each."""
+
+    def straggler(phase, shard, factor):
+        def mutate(state, it, alerts):
+            state["costs"][phase][shard] *= factor
+        return mutate
+
+    def cost_drift(state, it, alerts):
+        # Step time moves while the cost vectors do not: the residual
+        # the waterfall cannot attribute.  The CUSUM detector (modeled
+        # by its alert) corroborates the rename to cost_model_drift.
+        state["step_ms_extra"] = 30.0
+        if (it - fault_step) % 5 == 0:
+            alerts.on_drift({"llm": True}, step=it)
+
+    def drop_spike(state, it, alerts):
+        state["moe_dropped_frac"] = 0.25
+        if (it - fault_step) % 5 == 0:
+            alerts.emit("moe_drop_spike", step=it, moe_dropped_frac=0.25,
+                        threshold=0.05)
+
+    def preempt(state, it, alerts):
+        state["recompute_frac"] = 0.15
+        if (it - fault_step) % 4 == 0:
+            alerts.on_preemptions(4, step=it)
+
+    def dispatcher(state, it, alerts):
+        state["exposed_ms"] = 28.0
+        if (it - fault_step) % 5 == 0:
+            alerts.emit("stale_plan_replanned", step=it, coeff_version=it)
+
+    def ckpt(state, it, alerts):
+        state["ckpt_ms"] = 30.0
+
+    def dead_tiles(state, it, alerts):
+        state["dead_tile_frac"] = 0.30
+
+    return [
+        ("straggler_shard_llm", "straggler_llm", straggler("llm", 0, 1.6)),
+        ("straggler_shard_vision", "straggler_vision",
+         straggler("vision", 2, 2.2)),
+        ("cost_drift", "cost_model_drift", cost_drift),
+        ("moe_drop_spike", "moe_drop_spike", drop_spike),
+        ("preemption_storm", "preemption_storm", preempt),
+        ("dispatcher_exposed", "dispatcher_exposed", dispatcher),
+        ("checkpoint_stall", "checkpoint_stall", ckpt),
+        ("kernel_dead_tiles", "kernel_dead_tiles", dead_tiles),
+    ]
+
+
+# ----------------------------------------------------------------------
+# Aggregated multi-rank /metrics endpoint round trip.
+# ----------------------------------------------------------------------
+def _rank_registry(rank, kind, rng):
+    """One DP shard's / engine replica's registry with overlapping
+    families, so aggregation actually has to merge."""
+    reg = MetricsRegistry()
+    c = reg.counter("train_tokens", "tokens", labels=("rank",))
+    c.inc(float(rng.integers(1000, 5000)), rank=str(rank))
+    g = reg.gauge("train_mfu_simulated", "mfu")
+    g.set(float(rng.uniform(0.7, 0.95)))
+    h = reg.histogram("step_ms", "step wall", labels=("kind",),
+                      buckets=(1.0, 5.0, 10.0, 50.0, float("inf")))
+    for v in rng.uniform(0.5, 40.0, size=200):
+        h.observe(float(v), kind=kind)
+    return reg
+
+
+def _scrape(url):
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        return resp.read().decode()
+
+
+def check_endpoint(seed=0):
+    """Serve an aggregated 3-shard + 2-replica view; validate strictly."""
+    rng = np.random.default_rng(seed)
+    shard_regs = [_rank_registry(r, "train", rng) for r in range(3)]
+    replica_regs = [_rank_registry(100 + r, "serve", rng) for r in range(2)]
+    all_regs = shard_regs + replica_regs
+
+    def provider():
+        return aggregate_registries(all_regs, gauge_mode="mean")
+
+    report = {"causes": [], "fault_step": None, "meta": {"source": "bench"}}
+    with MetricsServer(provider, triage_provider=lambda: report) as srv:
+        first = validate_openmetrics(_scrape(srv.url + "/metrics"))
+        # Counters move between scrapes; the second scrape must parse
+        # AND be monotone against the first.
+        for reg in all_regs:
+            reg.get("train_tokens").inc(64.0, rank="x")
+        second = validate_openmetrics(_scrape(srv.url + "/metrics"),
+                                      previous=first)
+        got = json.loads(_scrape(srv.url + "/triage"))
+    # The aggregate must equal the union stream on the exact kinds.
+    want_tokens = sum(
+        child.value for reg in all_regs
+        for _, child in reg.get("train_tokens").children())
+    agg_tokens = sum(v for k, v in second.items()
+                     if k.startswith("train_tokens_total"))
+    if abs(agg_tokens - want_tokens) > 1e-6:
+        raise AssertionError(
+            f"aggregated counter {agg_tokens} != union {want_tokens}")
+    if got.get("meta", {}).get("source") != "bench":
+        raise AssertionError(f"/triage did not round-trip: {got}")
+    return {"series": len(second), "tokens_match": True}
+
+
+# ----------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shorter runs (CI lane); same scenarios")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the headline gates instead of only "
+                         "reporting them")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    steps = 40 if args.smoke else 80
+    fault_step = steps // 2
+    rows = []
+    hits = 0
+    closure_max = 0.0
+    for i, (name, expected, mutate) in enumerate(
+            scenarios(steps, fault_step)):
+        rep, closure = run_scenario(name, steps=steps, fault_step=fault_step,
+                                    seed=args.seed * 1000 + i, mutate=mutate)
+        got = rep["causes"][0]["cause"] if rep["causes"] else None
+        top1 = got == expected
+        hits += top1
+        if name != "cost_drift":  # drift MUST blow the residual up
+            closure_max = max(closure_max, closure["max_closure_err"])
+        rows.append({
+            "scenario": name, "expected": expected, "got": got,
+            "top1": bool(top1), "fault_step_true": fault_step,
+            "fault_step_est": rep["fault_step"],
+            "gap_delta": rep["gap_delta"], "n_anomalies": rep["n_anomalies"],
+            "n_alerts": rep["n_alerts"],
+            "closure_max": closure["max_closure_err"],
+            "top3": [c["cause"] for c in rep["causes"][:3]],
+        })
+        print(f"{'OK ' if top1 else 'MISS'} {name}: expected {expected} "
+              f"got {got} (fault@{fault_step} est@{rep['fault_step']}, "
+              f"closure {closure['max_closure_err']:.3f})")
+
+    try:
+        endpoint = check_endpoint(seed=args.seed)
+        endpoint_valid = True
+    except Exception as e:  # noqa: BLE001 -- a flag, not a crash
+        endpoint = {"error": str(e)}
+        endpoint_valid = False
+    print(f"aggregated /metrics endpoint: "
+          f"{'valid' if endpoint_valid else 'INVALID'} {endpoint}")
+
+    accuracy = hits / len(rows)
+    doc = {
+        "config": {"steps": steps, "fault_step": fault_step,
+                   "d": D, "seed": args.seed, "smoke": args.smoke},
+        "headline": {
+            "triage_top1_accuracy": accuracy,
+            "waterfall_closure_max": closure_max,
+            "waterfall_closure_ok": bool(closure_max <= CLOSURE_GATE),
+            "metrics_endpoint_valid": endpoint_valid,
+        },
+        "scenarios": rows,
+        "endpoint": endpoint,
+    }
+    print(f"\ntriage_top1_accuracy={accuracy:.3f} "
+          f"waterfall_closure_max={closure_max:.4f} "
+          f"(gate <= {CLOSURE_GATE})")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    if args.check:
+        assert accuracy >= 0.75, f"top-1 accuracy {accuracy} < 0.75"
+        assert closure_max <= CLOSURE_GATE, \
+            f"closure {closure_max} > {CLOSURE_GATE}"
+        assert endpoint_valid, f"metrics endpoint invalid: {endpoint}"
+        print("checks OK")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ from repro.checkpoint.state import (
 from repro.checkpoint.store import (
     CheckpointCorruptError,
     CheckpointManager,
+    CheckpointOp,
     LeafInfo,
     load_manifest,
     load_pytree,
@@ -34,6 +35,7 @@ from repro.checkpoint.store import (
 __all__ = [
     "CheckpointCorruptError",
     "CheckpointManager",
+    "CheckpointOp",
     "DataCursor",
     "ElasticResumeError",
     "LeafInfo",

@@ -35,6 +35,7 @@ import json
 import os
 import re
 import shutil
+import time
 from typing import Any, Iterator
 
 import numpy as np
@@ -42,6 +43,7 @@ import numpy as np
 __all__ = [
     "CheckpointCorruptError",
     "CheckpointManager",
+    "CheckpointOp",
     "LeafInfo",
     "load_manifest",
     "load_pytree",
@@ -363,6 +365,23 @@ def load_pytree(path: str, *, verify: bool = True) -> tuple[Any, dict[str, Any]]
 # Step-numbered checkpoint directory with retention + fallback restore
 
 
+@dataclasses.dataclass
+class CheckpointOp:
+    """One timed save/restore operation (observability attribution).
+
+    ``start_s`` is the host monotonic-ish wall clock (``time.time``)
+    when the op began; ``wall_ms`` its duration.  The op log feeds the
+    Perfetto timeline's checkpoint track
+    (:func:`repro.obs.timeline.build_timeline`) and the MFU-gap
+    waterfall's ``checkpoint_stall`` component.
+    """
+
+    kind: str  # "save" | "restore"
+    step: int  # checkpoint step (-1 when a restore found nothing)
+    start_s: float
+    wall_ms: float
+
+
 class CheckpointManager:
     """``<root>/step_NNNNNN`` checkpoints with keep-last-K retention.
 
@@ -371,14 +390,38 @@ class CheckpointManager:
     renaming it to ``step_NNNNNN.corrupt`` and falls back to the next
     older complete checkpoint.  ``.tmp`` directories (crash litter) are
     ignored by :meth:`steps` and removed on the next save.
+
+    Every save/restore is timed into :attr:`ops` (and, when a
+    ``metrics`` registry is attached, a ``ckpt_op_ms{op=...}``
+    histogram) so checkpoint stalls are attributable instead of
+    vanishing into the step time.
     """
 
-    def __init__(self, root: str, *, keep_last: int = 3) -> None:
+    def __init__(self, root: str, *, keep_last: int = 3, metrics=None) -> None:
         if keep_last < 1:
             raise ValueError(f"keep_last must be >= 1, got {keep_last}")
         self.root = os.path.abspath(root)
         self.keep_last = keep_last
+        self.ops: list[CheckpointOp] = []
+        self._h_op = None
+        if metrics is not None:
+            self._h_op = metrics.histogram(
+                "ckpt_op_ms", "checkpoint save/restore wall time", labels=("op",)
+            )
         os.makedirs(self.root, exist_ok=True)
+
+    def _record_op(self, kind: str, step: int, start_s: float, t0: float) -> None:
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        self.ops.append(
+            CheckpointOp(kind=kind, step=step, start_s=start_s, wall_ms=wall_ms)
+        )
+        if self._h_op is not None:
+            self._h_op.observe(wall_ms, op=kind)
+
+    @property
+    def last_op_ms(self) -> float:
+        """Duration of the most recent save/restore (0 when none ran)."""
+        return self.ops[-1].wall_ms if self.ops else 0.0
 
     # -- layout ---------------------------------------------------------
     def step_path(self, step: int) -> str:
@@ -407,6 +450,7 @@ class CheckpointManager:
         extras: dict[str, Any] | None = None,
         meta: dict[str, Any] | None = None,
     ) -> str:
+        start_s, t0 = time.time(), time.perf_counter()
         self._collect_tmp_litter()
         path = save_pytree(
             self.step_path(step),
@@ -416,6 +460,7 @@ class CheckpointManager:
             meta={"step": int(step), **(meta or {})},
         )
         self._prune()
+        self._record_op("save", int(step), start_s, t0)
         return path
 
     def _collect_tmp_litter(self) -> None:
@@ -430,7 +475,11 @@ class CheckpointManager:
 
     # -- restore --------------------------------------------------------
     def restore(self, step: int, *, verify: bool = True):
-        return load_pytree(self.step_path(step), verify=verify)
+        start_s, t0 = time.time(), time.perf_counter()
+        try:
+            return load_pytree(self.step_path(step), verify=verify)
+        finally:
+            self._record_op("restore", int(step), start_s, t0)
 
     def restore_latest(self, *, verify: bool = True, on_corrupt: str = "flag"):
         """Newest complete checkpoint -> (tree, manifest), or ``None``
@@ -444,14 +493,21 @@ class CheckpointManager:
             raise ValueError(
                 f"on_corrupt must be 'flag' or 'ignore', got {on_corrupt!r}"
             )
-        for step in reversed(self.steps()):
-            path = self.step_path(step)
-            try:
-                return load_pytree(path, verify=verify)
-            except CheckpointCorruptError:
-                if on_corrupt == "flag":
-                    self._flag_corrupt(path)
-        return None
+        start_s, t0 = time.time(), time.perf_counter()
+        restored = -1
+        try:
+            for step in reversed(self.steps()):
+                path = self.step_path(step)
+                try:
+                    out = load_pytree(path, verify=verify)
+                    restored = step
+                    return out
+                except CheckpointCorruptError:
+                    if on_corrupt == "flag":
+                        self._flag_corrupt(path)
+            return None
+        finally:
+            self._record_op("restore", restored, start_s, t0)
 
     def _flag_corrupt(self, path: str) -> None:
         """Rename to a unique ``*.corrupt`` name; never let the rename

@@ -14,10 +14,30 @@ atomically rewritten every ``--metrics-every`` steps), a crash-safe
 JSONL flight recorder (``flight.jsonl``) carrying run metadata and
 structured alert events (cost-model drift, checkpoint corruption
 fallbacks, MoE drop spikes, stale-plan re-plans), and one merged
-Perfetto timeline (``timeline.json``) with orchestrator spans and
-MFU/goodput/imbalance counter tracks.  ``--inject-drift N`` triples the
-observed step time from step N on -- a fault-injection handle for
-exercising the CUSUM-drift alert path end to end.
+Perfetto timeline (``timeline.json``) with orchestrator spans,
+checkpoint save/restore spans and MFU/goodput/imbalance counter
+tracks.  On top of the recording plane sits the attribution plane: a
+per-step MFU-gap waterfall (:class:`repro.obs.GapWaterfall`, recorded
+as ``waterfall`` flight events), online anomaly detection over every
+ledger/waterfall series (:class:`repro.obs.AnomalyMonitor`), and an
+end-of-run ranked root-cause report (``triage.json`` +
+``python -m repro.obs.triage <metrics-dir>``).
+
+``--serve-metrics PORT`` serves the registry live at
+``http://127.0.0.1:PORT/metrics`` (OpenMetrics) with the current triage
+report at ``/triage`` (JSON); ``--serve-metrics-linger SEC`` keeps the
+server up after the loop finishes so scrapers (the nightly CI curl)
+can take a final sample.  The bound address is written to
+``<metrics-dir>/server.json``.
+
+Fault injection handles (each implies the plane it exercises):
+``--inject-drift N`` triples the observed step time from step N on
+(fires the CUSUM cost-model-drift alert); ``--inject-straggler N``
+inflates shard 0's LLM-phase cost 1.6x from step N on (fires the
+``imbalance_llm`` waterfall component and the ``straggler_llm`` triage
+root cause); ``--inject-drop-spike N`` reports a 20% MoE drop fraction
+from step N on (fires the drop-spike alert and the ``moe_drop``
+component).
 
 Fault tolerance: ``--ckpt-dir DIR --ckpt-every N`` snapshots the full
 :class:`~repro.checkpoint.TrainState` (params, optimizer state, data
@@ -54,9 +74,10 @@ from repro.configs import get_config
 from repro.core.orchestrator import MLLMGlobalOrchestrator
 from repro.data.pipeline import PrefetchingLoader
 from repro.data.synthetic import Example
-from repro.obs import (AlertBridge, FlightRecorder, MetricsRegistry,
-                       StepLedger, build_timeline, set_registry,
-                       write_openmetrics)
+from repro.obs import (AlertBridge, AnomalyMonitor, FlightRecorder,
+                       GapWaterfall, MetricsRegistry, MetricsServer,
+                       StepLedger, build_timeline, render_text,
+                       set_registry, triage, write_openmetrics)
 from repro.sharding.specs import opt_state_specs, param_specs, to_shardings
 from repro.telemetry import AdaptiveOrchestration
 from repro.training.optimizer import AdamWConfig
@@ -117,6 +138,26 @@ def main() -> None:
                     help="fault injection: report 3x step times from STEP "
                          "on (fires the CUSUM drift alert; implies "
                          "--adaptive)")
+    ap.add_argument("--inject-straggler", type=int, default=None,
+                    metavar="STEP",
+                    help="fault injection: inflate shard 0's LLM-phase "
+                         "cost 1.6x from STEP on (fires the imbalance "
+                         "waterfall component / straggler triage cause)")
+    ap.add_argument("--inject-drop-spike", type=int, default=None,
+                    metavar="STEP",
+                    help="fault injection: report moe_dropped_frac=0.2 "
+                         "from STEP on (fires the drop-spike alert and "
+                         "the moe_drop waterfall component)")
+    ap.add_argument("--serve-metrics", type=int, default=None, metavar="PORT",
+                    help="serve live /metrics (OpenMetrics) and /triage "
+                         "(JSON) on 127.0.0.1:PORT (0 picks a free port; "
+                         "requires --metrics-dir; address lands in "
+                         "<metrics-dir>/server.json)")
+    ap.add_argument("--serve-metrics-linger", type=float, default=0.0,
+                    metavar="SEC",
+                    help="keep the metrics server up SEC seconds after "
+                         "the loop ends (lets scrapers take a final "
+                         "sample)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="checkpoint root (enables checkpointing)")
     ap.add_argument("--ckpt-every", type=int, default=5,
@@ -137,8 +178,11 @@ def main() -> None:
     if args.inject_drift is not None and not args.adaptive:
         print("--inject-drift implies --adaptive; enabling calibration")
         args.adaptive = True
+    if args.serve_metrics is not None and not args.metrics_dir:
+        raise SystemExit("--serve-metrics requires --metrics-dir")
 
     registry = ledger = recorder = alerts = None
+    waterfall = monitor = ledger_monitor = server = None
     if args.metrics_dir:
         from repro.launch.roofline import get_hw
 
@@ -152,6 +196,31 @@ def main() -> None:
                   "steps": args.steps, "adaptive": args.adaptive,
                   "hw": hw.name, "smoke": args.smoke})
         alerts = AlertBridge(recorder, registry)
+        waterfall = GapWaterfall(registry=registry)
+        # Two monitors because the ledger and the waterfall both track
+        # an ``imbalance_<phase>`` series (ratio vs fraction-of-step):
+        # one shared cursor map would silently skip one of the pair.
+        monitor = AnomalyMonitor(alerts=alerts, registry=registry)
+        ledger_monitor = AnomalyMonitor(alerts=alerts, registry=registry,
+                                        include=("mfu_", "goodput_"))
+
+        def triage_now() -> dict:
+            return triage(
+                [w.to_dict() for w in waterfall.history],
+                anomalies=[a.to_dict() for a in (monitor.anomalies
+                                                 + ledger_monitor.anomalies)],
+                alerts=list(alerts.alerts),
+                meta={"arch": cfg.name, "d": args.d})
+
+        if args.serve_metrics is not None:
+            server = MetricsServer(lambda: registry,
+                                   triage_provider=triage_now,
+                                   port=args.serve_metrics).start()
+            with open(os.path.join(args.metrics_dir, "server.json"),
+                      "w") as f:
+                json.dump({"url": server.url, "port": server.port}, f)
+            print(f"serving live metrics at {server.url}/metrics "
+                  f"(triage at {server.url}/triage)")
 
     mesh = None
     dp_axes = ("data",)
@@ -161,7 +230,8 @@ def main() -> None:
 
     manager = None
     if args.ckpt_dir:
-        manager = CheckpointManager(args.ckpt_dir, keep_last=args.keep_last)
+        manager = CheckpointManager(args.ckpt_dir, keep_last=args.keep_last,
+                                    metrics=registry)
 
     # The CLI loop feeds ONE straggler-attributed wall-clock scalar per
     # step, and shared-CPU wall times are far noisier than the per-shard
@@ -270,9 +340,19 @@ def main() -> None:
 
     t0 = time.time()
     done = start_step
+    pending_ckpt_ms = 0.0  # save wall charged to the NEXT step's waterfall
     try:
         for it in range(start_step, args.steps):
             batch_np, report, _ = next(loader)
+            if (args.inject_straggler is not None
+                    and it >= args.inject_straggler):
+                # Fault injection: one shard's LLM phase runs 1.6x hot,
+                # exactly the residual-imbalance signature the waterfall
+                # attributes to imbalance_llm (triage: straggler_llm).
+                costs = np.asarray(report.phase_costs["llm"],
+                                   dtype=np.float64).copy()
+                costs[0] *= 1.6
+                report.phase_costs["llm"] = costs
             batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
             ts = time.perf_counter()
             params, opt_state, m = step(params, opt_state, batch)
@@ -302,9 +382,33 @@ def main() -> None:
             if ledger is not None:
                 host_m = {k: float(v) for k, v in m.items()
                           if np.ndim(v) == 0}
+                if (args.inject_drop_spike is not None
+                        and it >= args.inject_drop_spike):
+                    # Fault injection: a capacity-overflow drop storm.
+                    host_m["moe_dropped_frac"] = 0.2
                 events = ledger.record_step(it, report=report,
                                             step_ms=step_ms, metrics=host_m)
                 alerts.on_ledger_events(events)
+                # The smoke path runs dense reference attention, so the
+                # tile fraction the Pallas kernels would have skipped IS
+                # dead compute actually paid this step -- but only for
+                # the attention share of the step's FLOPs, so weight it
+                # down before charging it against total useful compute.
+                dead = ledger.series.get("kernel_flash_skip_frac")
+                attn_share = 0.2
+                if it > start_step:
+                    # Skip the compile-dominated first step: its wall
+                    # time would poison the waterfall's cost->ms EWMA
+                    # (same reason the calibrator skips it above).
+                    wf = waterfall.observe(
+                        it, report=report, step_ms=step_ms, metrics=host_m,
+                        ckpt_ms=pending_ckpt_ms,
+                        dead_tile_frac=(dead[-1][1] * attn_share
+                                        if dead else 0.0))
+                    recorder.record("waterfall", **wf.to_dict())
+                pending_ckpt_ms = 0.0
+                monitor.poll(waterfall.series)
+                ledger_monitor.poll(ledger.series)
                 if (it - start_step) % max(args.metrics_every, 1) == 0:
                     ledger.record_kernel_stats(it, batch_np)
                     write_openmetrics(
@@ -318,6 +422,7 @@ def main() -> None:
             if manager is not None and args.ckpt_every > 0 \
                     and done % args.ckpt_every == 0 and done < args.steps:
                 save_ckpt(done)
+                pending_ckpt_ms = manager.last_op_ms
             if it % 5 == 0 or it == args.steps - 1:
                 denom = max(it + 1 - start_step, 1)
                 print(f"step {it:4d} loss={float(m['loss']):.4f} "
@@ -342,10 +447,17 @@ def main() -> None:
         tl_path = os.path.join(args.metrics_dir, "timeline.json")
         tl = build_timeline(
             trace_buffer=adaptive.trace if adaptive is not None else None,
-            ledger=ledger)
+            ledger=ledger, waterfall=waterfall,
+            checkpoint_ops=manager.ops if manager is not None else None)
         with open(tl_path, "w") as f:
             json.dump(tl, f)
+        triage_report = triage_now()
+        with open(os.path.join(args.metrics_dir, "triage.json"), "w") as f:
+            json.dump(triage_report, f, indent=1, default=str)
+        print(render_text(triage_report))
         summary = ledger.summary()
+        summary.update({f"waterfall_{k}": v
+                        for k, v in waterfall.summary().items()})
         recorder.record("summary", **{k: v for k, v in summary.items()
                                       if isinstance(v, (int, float))})
         recorder.close()
@@ -354,7 +466,13 @@ def main() -> None:
         print(f"wrote {args.metrics_dir}/metrics.prom, flight.jsonl "
               f"({recorder.events_written} events, "
               f"{len(alerts.alerts)} alerts), timeline.json "
-              f"(open in ui.perfetto.dev)")
+              f"(open in ui.perfetto.dev), triage.json")
+    if server is not None:
+        if args.serve_metrics_linger > 0:
+            print(f"metrics server lingering {args.serve_metrics_linger:g}s "
+                  f"at {server.url}", flush=True)
+            time.sleep(args.serve_metrics_linger)
+        server.stop()
     print("training loop complete")
 
 

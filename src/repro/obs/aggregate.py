@@ -1,0 +1,508 @@
+"""Cross-rank aggregation: mergeable registries + a live /metrics server.
+
+A multi-shard / multi-replica run keeps one :class:`MetricsRegistry`
+per rank (DP shard, engine replica, host process).  This module makes
+those registries *mergeable* -- the algebra every metric kind needs for
+a cluster-level view that is indistinguishable from having recorded
+the union stream into one registry:
+
+  * counters      -- per-labelset sum;
+  * gauges        -- per-labelset mean by default (``gauge_mode="sum"``
+                     or ``"last"`` where summing is the right algebra);
+  * histograms    -- bucket-wise sum (identical bucket layouts
+                     required), ``_sum``/``_count`` sums, and a proper
+                     Greenwald-Khanna **sketch merge**
+                     (:func:`merge_sketches`): the merged sketch
+                     answers quantiles over the union stream with rank
+                     error ``<= max(eps_a, eps_b) * n_total`` (the
+                     mergeable-summaries bound, property-tested in
+                     ``tests/test_aggregate.py``).
+
+Registries also serialize (:func:`registry_state_dict` /
+:func:`registry_from_state_dict`) so ranks can ship snapshots as JSON
+and an aggregator process can merge them without sharing memory.
+
+:class:`MetricsServer` is a stdlib ``http.server`` exporter serving
+the (optionally aggregated) registry live at ``/metrics`` (OpenMetrics
+text) and the current triage report at ``/triage`` (JSON) --
+``launch/train.py --serve-metrics PORT`` wires it up.
+
+:func:`parse_openmetrics` is the strict exposition parser the nightly
+CI uses against the live endpoint: it rejects duplicate series,
+out-of-order or non-cumulative histogram buckets, ``_bucket``/
+``_count`` mismatches, negative or (given a previous scrape)
+non-monotone ``_total`` values, and missing ``# EOF`` terminators.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import threading
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Callable, Mapping, Sequence
+
+from repro.obs.export import render_openmetrics
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                QuantileSketch)
+
+__all__ = [
+    "MetricsServer",
+    "aggregate_registries",
+    "merge_sketches",
+    "parse_openmetrics",
+    "registry_from_state_dict",
+    "registry_state_dict",
+    "validate_openmetrics",
+]
+
+
+# ----------------------------------------------------------------------
+# Greenwald-Khanna sketch merge.
+# ----------------------------------------------------------------------
+def _rank_tuples(sk: QuantileSketch) -> list[tuple[float, float, float]]:
+    """(value, rmin, rmax) rows of a drained sketch."""
+    sk._drain()
+    out = []
+    rmin = 0.0
+    for v, g, delta in sk._tuples:
+        rmin += g
+        out.append((v, rmin, rmin + delta))
+    return out
+
+
+def merge_sketches(a: QuantileSketch, b: QuantileSketch) -> QuantileSketch:
+    """Merge two GK sketches into one covering the union stream.
+
+    Classic mergeable-summaries construction: for a tuple ``t`` from
+    sketch A, its merged rank bounds are its own plus what the OTHER
+    sketch pins around ``t.v`` -- ``rmin`` of B's predecessor and
+    ``rmax`` of B's successor (minus one; ``n_B`` when no successor).
+    The merged tuple widths then satisfy
+
+        rmax - rmin  <=  2*eps_a*n_a + 2*eps_b*n_b
+                     <=  2*max(eps_a, eps_b) * (n_a + n_b)
+
+    i.e. the merged sketch preserves ``eps = max(eps_a, eps_b)`` --
+    the post-merge rank-error bound the property tests check.
+    """
+    a._drain()
+    b._drain()
+    if a.n == 0 and b.n == 0:
+        return QuantileSketch(eps=max(a.eps, b.eps))
+    if a.n == 0 or b.n == 0:
+        src = b if a.n == 0 else a
+        out = QuantileSketch.from_state_dict(src.state_dict())
+        out.eps = max(a.eps, b.eps)
+        return out
+
+    ra, rb = _rank_tuples(a), _rank_tuples(b)
+    na, nb = a.n, b.n
+    merged: list[tuple[float, float, float]] = []  # (v, rmin_m, rmax_m)
+
+    for side, rows, other, n_other in ((0, ra, rb, nb), (1, rb, ra, na)):
+        j = 0  # predecessor cursor into `other`
+        for v, rmin, rmax in rows:
+            while j < len(other) and other[j][0] <= v:
+                j += 1
+            pred_rmin = other[j - 1][1] if j > 0 else 0.0
+            if j < len(other):
+                succ_rmax = other[j][2] - 1.0
+            else:
+                succ_rmax = float(n_other)
+            merged.append((v, rmin + pred_rmin, rmax + succ_rmax))
+    merged.sort(key=lambda t: (t[0], t[1]))
+
+    out = QuantileSketch(eps=max(a.eps, b.eps))
+    out._n = na + nb
+    tuples: list[list[float]] = []
+    prev_rmin = 0.0
+    for v, rmin_m, rmax_m in merged:
+        g = rmin_m - prev_rmin
+        tuples.append([v, g, max(rmax_m - rmin_m, 0.0)])
+        prev_rmin = rmin_m
+    out._tuples = tuples
+    out._compress()
+    return out
+
+
+# ----------------------------------------------------------------------
+# Registry serialization + merge.
+# ----------------------------------------------------------------------
+def registry_state_dict(registry: MetricsRegistry) -> dict:
+    """JSON-able snapshot of a whole registry (for shipping cross-rank)."""
+    fams = []
+    for fam in registry.families():
+        children = []
+        for labels, child in fam.children():
+            if isinstance(child, Histogram):
+                with child._lock:
+                    state = {"buckets": list(child.buckets),
+                             "counts": list(child._counts),
+                             "sum": child._sum, "count": child._count,
+                             "sketch": child._sketch.state_dict()}
+            else:
+                state = {"value": child.value}
+            children.append({"labels": labels, "state": state})
+        fams.append({"name": fam.name, "kind": fam.kind, "help": fam.help,
+                     "labelnames": list(fam.labelnames),
+                     "children": children})
+    return {"families": fams}
+
+
+def registry_from_state_dict(state: Mapping) -> MetricsRegistry:
+    reg = MetricsRegistry()
+    for fd in state["families"]:
+        kind, labelnames = fd["kind"], tuple(fd["labelnames"])
+        if kind == "counter":
+            fam = reg.counter(fd["name"], fd["help"], labels=labelnames)
+        elif kind == "gauge":
+            fam = reg.gauge(fd["name"], fd["help"], labels=labelnames)
+        else:
+            buckets = tuple(
+                fd["children"][0]["state"]["buckets"]) if fd["children"] \
+                else None
+            kw = {"buckets": buckets} if buckets else {}
+            fam = reg.histogram(fd["name"], fd["help"], labels=labelnames,
+                                **kw)
+        for ch in fd["children"]:
+            child = fam.labels(**ch["labels"])
+            s = ch["state"]
+            if isinstance(child, (Counter, Gauge)):
+                child._value = float(s["value"])
+            else:
+                child._counts = [int(c) for c in s["counts"]]
+                child._sum = float(s["sum"])
+                child._count = int(s["count"])
+                child._sketch = QuantileSketch.from_state_dict(s["sketch"])
+    return reg
+
+
+def _merge_child_into(kind: str, dst, src, gauge_mode: str,
+                      n_sources: int) -> None:
+    if kind == "counter":
+        dst._value += src.value
+    elif kind == "gauge":
+        if gauge_mode == "sum":
+            dst._value += src.value
+        elif gauge_mode == "last":
+            dst._value = src.value
+        else:  # mean: accumulate; divided once at the end
+            dst._value += src.value
+    else:  # histogram
+        if tuple(src.buckets) != tuple(dst.buckets):
+            raise ValueError(
+                f"histogram bucket layouts differ: {dst.buckets} vs "
+                f"{src.buckets}")
+        with src._lock:
+            counts = list(src._counts)
+            hsum, hcount = src._sum, src._count
+            sk = QuantileSketch.from_state_dict(src._sketch.state_dict())
+        dst._counts = [c0 + c1 for c0, c1 in zip(dst._counts, counts)]
+        dst._sum += hsum
+        dst._count += hcount
+        dst._sketch = merge_sketches(dst._sketch, sk)
+
+
+def aggregate_registries(registries: Sequence[MetricsRegistry], *,
+                         gauge_mode: str = "mean") -> MetricsRegistry:
+    """Merge per-rank registries into one cluster-level registry.
+
+    Counter and histogram merges are exact (equal to having recorded
+    the union stream, up to the sketch's eps bound on quantiles);
+    gauges have no canonical union algebra, so pick ``gauge_mode``:
+    ``"mean"`` (default: utilization-style fractions), ``"sum"``
+    (token counts carried in gauges), or ``"last"``.
+    """
+    if gauge_mode not in ("mean", "sum", "last"):
+        raise ValueError(f"unknown gauge_mode {gauge_mode!r}")
+    out = MetricsRegistry()
+    # Count how many sources carry each (family, labelset) gauge so the
+    # mean divides by the number of actual contributors.
+    gauge_hits: dict[tuple[str, tuple], int] = {}
+    for reg in registries:
+        for fam in reg.families():
+            if fam.kind == "counter":
+                dst_fam = out.counter(fam.name, fam.help,
+                                      labels=fam.labelnames)
+            elif fam.kind == "gauge":
+                dst_fam = out.gauge(fam.name, fam.help, labels=fam.labelnames)
+            else:
+                dst_fam = out.histogram(fam.name, fam.help,
+                                        labels=fam.labelnames,
+                                        **fam._metric_kw)
+            for labels, child in fam.children():
+                dst = dst_fam.labels(**labels)
+                _merge_child_into(fam.kind, dst, child, gauge_mode,
+                                  len(registries))
+                if fam.kind == "gauge":
+                    key = (fam.name, tuple(sorted(labels.items())))
+                    gauge_hits[key] = gauge_hits.get(key, 0) + 1
+    if gauge_mode == "mean":
+        for fam in out.families():
+            if fam.kind != "gauge":
+                continue
+            for labels, child in fam.children():
+                key = (fam.name, tuple(sorted(labels.items())))
+                child._value /= max(gauge_hits.get(key, 1), 1)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Strict OpenMetrics parsing / validation.
+# ----------------------------------------------------------------------
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>\S+)\s*$")
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def _parse_value(tok: str) -> float:
+    if tok == "+Inf":
+        return float("inf")
+    if tok == "-Inf":
+        return float("-inf")
+    if tok == "NaN":
+        return float("nan")
+    return float(tok)
+
+
+def parse_openmetrics(text: str) -> dict[str, float]:
+    """Strictly parse a text exposition into ``{series_key: value}``.
+
+    Raises :class:`ValueError` on any structural violation: garbage
+    lines, duplicate ``(name, labelset)`` series, histogram ``le``
+    buckets out of order or with decreasing cumulative counts,
+    ``+Inf``-bucket / ``_count`` mismatches, negative ``_total``
+    values, or a missing ``# EOF`` terminator.
+    """
+    samples: dict[str, float] = {}
+    buckets: dict[str, list[tuple[float, float]]] = {}  # base{labels-sans-le}
+    types: dict[str, str] = {}
+    saw_eof = False
+    for lineno, line in enumerate(text.split("\n"), start=1):
+        if line == "":
+            continue
+        if saw_eof:
+            raise ValueError(f"line {lineno}: content after # EOF")
+        if line == "# EOF":
+            saw_eof = True
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(None, 3)
+            if len(parts) < 4 or parts[3] not in ("counter", "gauge",
+                                                  "histogram", "summary",
+                                                  "untyped"):
+                raise ValueError(f"line {lineno}: malformed TYPE: {line!r}")
+            if parts[2] in types:
+                raise ValueError(
+                    f"line {lineno}: duplicate TYPE for {parts[2]}")
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("# HELP "):
+            if len(line.split(None, 3)) < 3:
+                raise ValueError(f"line {lineno}: malformed HELP: {line!r}")
+            continue
+        if line.startswith("#"):
+            raise ValueError(f"line {lineno}: unknown comment: {line!r}")
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"line {lineno}: unparsable sample: {line!r}")
+        name = m.group("name")
+        raw_labels = m.group("labels") or ""
+        labels = dict(_LABEL_RE.findall(raw_labels))
+        consumed = "".join(f'{k}="{v}"' for k, v in _LABEL_RE.findall(
+            raw_labels))
+        if raw_labels.replace(",", "") != consumed:
+            raise ValueError(f"line {lineno}: malformed labels: {line!r}")
+        try:
+            value = _parse_value(m.group("value"))
+        except ValueError as e:
+            raise ValueError(f"line {lineno}: bad value: {line!r}") from e
+        key = name + "{" + ",".join(
+            f'{k}="{v}"' for k, v in sorted(labels.items())) + "}"
+        if key in samples:
+            raise ValueError(f"line {lineno}: duplicate series {key}")
+        samples[key] = value
+        if name.endswith("_total") and (value < 0 or value != value):
+            raise ValueError(
+                f"line {lineno}: counter {key} has invalid value {value}")
+        if name.endswith("_bucket") and "le" in labels:
+            le = _parse_value(labels["le"])
+            rest = {k: v for k, v in labels.items() if k != "le"}
+            bkey = name[:-len("_bucket")] + "{" + ",".join(
+                f'{k}="{v}"' for k, v in sorted(rest.items())) + "}"
+            rows = buckets.setdefault(bkey, [])
+            if rows:
+                if le <= rows[-1][0]:
+                    raise ValueError(
+                        f"line {lineno}: {bkey} buckets out of order "
+                        f"(le={le} after le={rows[-1][0]})")
+                if value < rows[-1][1]:
+                    raise ValueError(
+                        f"line {lineno}: {bkey} cumulative bucket count "
+                        f"decreases ({value} < {rows[-1][1]})")
+            rows.append((le, value))
+    if not saw_eof:
+        raise ValueError("missing # EOF terminator")
+    for bkey, rows in buckets.items():
+        if rows[-1][0] != float("inf"):
+            raise ValueError(f"{bkey}: no +Inf bucket")
+        base, labels_part = bkey.split("{", 1)
+        count_key = base + "_count{" + labels_part
+        if count_key in samples and samples[count_key] != rows[-1][1]:
+            raise ValueError(
+                f"{bkey}: +Inf bucket {rows[-1][1]} != _count "
+                f"{samples[count_key]}")
+    return samples
+
+
+def validate_openmetrics(text: str, *,
+                         previous: Mapping[str, float] | None = None,
+                         ) -> dict[str, float]:
+    """Parse strictly; additionally reject ``_total`` series that went
+    DOWN versus a previous scrape (counters must be monotone)."""
+    samples = parse_openmetrics(text)
+    if previous:
+        for key, value in samples.items():
+            name = key.split("{", 1)[0]
+            if not name.endswith("_total"):
+                continue
+            prev = previous.get(key)
+            if prev is not None and value < prev:
+                raise ValueError(
+                    f"counter {key} went backwards: {prev} -> {value}")
+    return samples
+
+
+# ----------------------------------------------------------------------
+# Live HTTP exporter.
+# ----------------------------------------------------------------------
+class MetricsServer:
+    """Serve ``/metrics`` (OpenMetrics) and ``/triage`` (JSON) live.
+
+    ``registry_provider`` returns the registry to render per request --
+    pass ``lambda: aggregate_registries([...])`` for a cross-rank view,
+    or just ``lambda: registry`` for a single-rank run.  Pure stdlib
+    (``ThreadingHTTPServer`` on a daemon thread); ``port=0`` picks a
+    free port (read it back from ``.port``).
+    """
+
+    def __init__(self, registry_provider: Callable[[], MetricsRegistry], *,
+                 triage_provider: Callable[[], Mapping] | None = None,
+                 host: str = "127.0.0.1", port: int = 0) -> None:
+        self.registry_provider = registry_provider
+        self.triage_provider = triage_provider
+        outer = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self) -> None:  # noqa: N802 (stdlib API name)
+                path = self.path.split("?", 1)[0]
+                if path in ("/metrics", "/"):
+                    try:
+                        body = render_openmetrics(
+                            outer.registry_provider()).encode()
+                    except Exception as e:  # surface, don't kill the thread
+                        self._send(500, f"render error: {e}\n".encode(),
+                                   "text/plain")
+                        return
+                    self._send(200, body,
+                               "text/plain; version=0.0.4; charset=utf-8")
+                elif path == "/triage":
+                    if outer.triage_provider is None:
+                        self._send(404, b"no triage provider\n", "text/plain")
+                        return
+                    try:
+                        body = json.dumps(outer.triage_provider(),
+                                          default=str).encode()
+                    except Exception as e:
+                        self._send(500, f"triage error: {e}\n".encode(),
+                                   "text/plain")
+                        return
+                    self._send(200, body, "application/json")
+                elif path == "/healthz":
+                    self._send(200, b"ok\n", "text/plain")
+                else:
+                    self._send(404, b"not found\n", "text/plain")
+
+            def _send(self, code: int, body: bytes, ctype: str) -> None:
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args) -> None:  # quiet
+                pass
+
+        self._httpd = ThreadingHTTPServer((host, port), Handler)
+        self._httpd.daemon_threads = True
+        self._thread: threading.Thread | None = None
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        host = self._httpd.server_address[0]
+        return f"http://{host}:{self.port}"
+
+    def start(self) -> "MetricsServer":
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="metrics-server", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    def __enter__(self) -> "MetricsServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+# ----------------------------------------------------------------------
+# CLI: validate a live endpoint or an exposition file (nightly CI).
+# ----------------------------------------------------------------------
+def _fetch(target: str) -> str:
+    if target.startswith(("http://", "https://")):
+        with urllib.request.urlopen(target, timeout=10) as resp:
+            return resp.read().decode()
+    with open(target) as f:
+        return f.read()
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="strictly validate an OpenMetrics exposition "
+                    "(URL or file)")
+    ap.add_argument("target", help="http(s) URL or path to a .prom file")
+    ap.add_argument("--previous", default=None,
+                    help="earlier scrape (URL or file) to check _total "
+                         "monotonicity against")
+    ap.add_argument("--expect", action="append", default=[],
+                    help="series name that must be present (repeatable)")
+    args = ap.parse_args(argv)
+    prev = None
+    if args.previous:
+        prev = parse_openmetrics(_fetch(args.previous))
+    samples = validate_openmetrics(_fetch(args.target), previous=prev)
+    names = {k.split("{", 1)[0] for k in samples}
+    for want in args.expect:
+        if want not in names:
+            raise SystemExit(f"expected series {want!r} not found")
+    print(f"openmetrics OK: {len(samples)} series, "
+          f"{len(names)} metric names")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,271 @@
+"""Online robust anomaly detection over ledger / waterfall series.
+
+The telemetry layer already runs a CUSUM drift detector over *cost
+model coefficients* (``repro.telemetry.calibrate.DriftDetector``); this
+module watches the *observability series themselves* -- MFU, goodput,
+per-phase imbalance, every waterfall component -- and classifies
+departures from baseline:
+
+  * ``spike``       -- a single point far outside the robust band that
+                       returns to baseline on the next point;
+  * ``level_shift`` -- ``shift_run`` consecutive points outside the
+                       band on the same side (the detector re-baselines
+                       to the new level so a sustained shift alerts
+                       exactly once);
+  * ``trend``       -- a slow, same-signed drift of the fast EWMA away
+                       from baseline sustained for ``trend_run`` steps
+                       (catches ramps too gradual to trip the band).
+
+Robustness: the baseline center is the warmup median and the scale is
+the MAD (sigma-equivalent, floored), both EWMA-tracked afterwards with
+Huberized updates -- out-of-band points never poison the baseline, so
+a level shift is measured against the *pre-shift* regime.
+
+:class:`AnomalyMonitor` fans a detector out per series, consumes
+``(step, value)`` series incrementally (the :class:`StepLedger` and
+:class:`GapWaterfall` layouts), and routes anomalies through
+:class:`repro.obs.export.AlertBridge`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.obs.registry import MetricsRegistry, get_registry
+
+__all__ = ["Anomaly", "SeriesDetector", "AnomalyMonitor"]
+
+
+@dataclasses.dataclass
+class Anomaly:
+    """One detected departure from a series' baseline."""
+
+    series: str
+    step: int  # step the anomaly STARTED (first out-of-band point)
+    kind: str  # "spike" | "level_shift" | "trend"
+    value: float  # offending value (last point of the run)
+    baseline: float  # robust center the deviation is measured against
+    score: float  # robust z-score at detection time
+    direction: int  # +1 above baseline, -1 below
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class SeriesDetector:
+    """EWMA + MAD band detector for one scalar series."""
+
+    def __init__(self, *, warmup: int = 8, z_spike: float = 6.0,
+                 z_shift: float = 3.5, shift_run: int = 3,
+                 trend_run: int = 7, trend_z: float = 1.5,
+                 alpha: float = 0.05, fast_alpha: float = 0.3,
+                 min_scale: float = 1e-4, rel_floor: float = 0.02) -> None:
+        if warmup < 3:
+            raise ValueError(f"warmup must be >= 3, got {warmup}")
+        if z_spike < z_shift:
+            raise ValueError("z_spike must be >= z_shift")
+        self.warmup = warmup
+        self.z_spike = z_spike
+        self.z_shift = z_shift
+        self.shift_run = shift_run
+        self.trend_run = trend_run
+        self.trend_z = trend_z
+        self.alpha = alpha
+        self.fast_alpha = fast_alpha
+        self.min_scale = min_scale
+        self.rel_floor = rel_floor
+        self._warm: list[float] = []
+        self.center: float | None = None
+        self.scale: float | None = None
+        self._fast: float | None = None
+        # Out-of-band run state.
+        self._run_len = 0
+        self._run_sign = 0
+        self._run_start = 0
+        self._pending_spike: tuple[int, float, float, int] | None = None
+        # Trend state: consecutive steps with a same-signed, material
+        # fast-EWMA deviation whose magnitude is not shrinking.
+        self._trend_len = 0
+        self._trend_sign = 0
+        self._trend_start = 0
+        self._trend_prev_dev = 0.0
+
+    # ------------------------------------------------------------------
+    def _floor(self, center: float) -> float:
+        return max(self.min_scale, self.rel_floor * abs(center))
+
+    def _baseline(self, values: Sequence[float]) -> None:
+        arr = np.asarray(values, dtype=np.float64)
+        self.center = float(np.median(arr))
+        mad = float(np.median(np.abs(arr - self.center)))
+        self.scale = max(1.4826 * mad, self._floor(self.center))
+        self._fast = self.center
+
+    def _rebaseline(self, values: Sequence[float]) -> None:
+        """Adopt a new regime after a level shift / trend fires, so a
+        sustained change alerts once instead of every step."""
+        center = float(np.mean(np.asarray(values, dtype=np.float64)))
+        self.center = center
+        self.scale = max(self.scale or 0.0, self._floor(center))
+        self._fast = center
+        self._run_len = 0
+        self._run_sign = 0
+        self._pending_spike = None
+        self._trend_len = 0
+        self._trend_sign = 0
+
+    # ------------------------------------------------------------------
+    def update(self, step: int, value: float, name: str = "") -> Anomaly | None:
+        v = float(value)
+        if self.center is None:
+            self._warm.append(v)
+            if len(self._warm) >= self.warmup:
+                self._baseline(self._warm)
+            return None
+
+        z = (v - self.center) / self.scale
+        sign = 1 if z >= 0 else -1
+        out: Anomaly | None = None
+
+        if abs(z) >= self.z_shift:
+            if self._run_sign == sign:
+                self._run_len += 1
+            else:
+                self._run_len = 1
+                self._run_sign = sign
+                self._run_start = step
+                if abs(z) >= self.z_spike:
+                    self._pending_spike = (step, v, z, sign)
+                else:
+                    self._pending_spike = None
+            if self._run_len >= self.shift_run:
+                out = Anomaly(series=name, step=self._run_start,
+                              kind="level_shift", value=v,
+                              baseline=self.center, score=float(abs(z)),
+                              direction=sign)
+                self._rebaseline([v])
+            return out
+
+        # Back in band: a one-point excursion that was spike-sized is a
+        # spike; a shorter-than-shift_run run just dissolves.
+        if self._pending_spike is not None and self._run_len == 1:
+            s_step, s_val, s_z, s_sign = self._pending_spike
+            out = Anomaly(series=name, step=s_step, kind="spike",
+                          value=s_val, baseline=self.center,
+                          score=float(abs(s_z)), direction=s_sign)
+        self._pending_spike = None
+        self._run_len = 0
+        self._run_sign = 0
+
+        # Trend: fast EWMA drifting away from the (slow) baseline.
+        self._fast = ((1.0 - self.fast_alpha) * self._fast
+                      + self.fast_alpha * v)
+        dev = (self._fast - self.center) / self.scale
+        dsign = 1 if dev >= 0 else -1
+        if abs(dev) >= self.trend_z and (
+                self._trend_sign != dsign
+                or abs(dev) >= self._trend_prev_dev - 0.1):
+            if self._trend_sign == dsign:
+                self._trend_len += 1
+            else:
+                self._trend_len = 1
+                self._trend_sign = dsign
+                self._trend_start = step
+            self._trend_prev_dev = abs(dev)
+            if out is None and self._trend_len >= self.trend_run:
+                out = Anomaly(series=name, step=self._trend_start,
+                              kind="trend", value=v, baseline=self.center,
+                              score=float(abs(dev)), direction=dsign)
+                self._rebaseline([self._fast])
+                return out
+        else:
+            self._trend_len = 0
+            self._trend_sign = 0
+            self._trend_prev_dev = 0.0
+
+        # Huberized baseline update: clip the residual so outliers move
+        # the center slowly; track scale as EWMA of |residual| * 1.253
+        # (mean-abs-dev -> sigma), floored.
+        resid = np.clip(v - self.center, -2.0 * self.scale, 2.0 * self.scale)
+        self.center += self.alpha * float(resid)
+        self.scale = max(
+            (1.0 - self.alpha) * self.scale
+            + self.alpha * 1.253 * abs(v - self.center),
+            self._floor(self.center))
+        return out
+
+
+class AnomalyMonitor:
+    """Per-series detectors over ``{name: [(step, value), ...]}`` maps.
+
+    ``poll`` consumes series incrementally (tracks a cursor per name),
+    so the caller can hand it the live ``StepLedger.series`` /
+    ``GapWaterfall.series`` dicts every step.  Detected anomalies are
+    counted in the registry (``anomalies_total{series,kind}``), routed
+    through an optional :class:`AlertBridge`, and returned.
+    """
+
+    def __init__(self, *, alerts=None,
+                 registry: MetricsRegistry | None = None,
+                 include: Iterable[str] | None = None,
+                 detector_kw: Mapping | None = None) -> None:
+        self.alerts = alerts
+        registry = registry if registry is not None else get_registry()
+        self._c_anom = registry.counter(
+            "anomalies", "anomalies detected on observability series",
+            labels=("series", "kind"))
+        self.include = tuple(include) if include is not None else None
+        self.detector_kw = dict(detector_kw or {})
+        self.detectors: dict[str, SeriesDetector] = {}
+        self._cursor: dict[str, int] = {}
+        self.anomalies: list[Anomaly] = []
+
+    def _wanted(self, name: str) -> bool:
+        if self.include is None:
+            return True
+        return any(name.startswith(p) for p in self.include)
+
+    def update(self, step: int, values: Mapping[str, float]) -> list[Anomaly]:
+        """Feed one step's {series: value} map directly."""
+        out: list[Anomaly] = []
+        for name, v in values.items():
+            if not self._wanted(name):
+                continue
+            det = self.detectors.get(name)
+            if det is None:
+                det = self.detectors[name] = SeriesDetector(**self.detector_kw)
+            a = det.update(step, v, name=name)
+            if a is not None:
+                out.append(a)
+        self._emit(out)
+        return out
+
+    def poll(self, series: Mapping[str, Sequence[tuple[int, float]]],
+             ) -> list[Anomaly]:
+        """Consume any new points of every (step, value) series."""
+        out: list[Anomaly] = []
+        for name, points in series.items():
+            if not self._wanted(name):
+                continue
+            start = self._cursor.get(name, 0)
+            if start >= len(points):
+                continue
+            det = self.detectors.get(name)
+            if det is None:
+                det = self.detectors[name] = SeriesDetector(**self.detector_kw)
+            for step, v in points[start:]:
+                a = det.update(step, v, name=name)
+                if a is not None:
+                    out.append(a)
+            self._cursor[name] = len(points)
+        self._emit(out)
+        return out
+
+    def _emit(self, anomalies: list[Anomaly]) -> None:
+        for a in anomalies:
+            self.anomalies.append(a)
+            self._c_anom.inc(series=a.series, kind=a.kind)
+            if self.alerts is not None:
+                self.alerts.on_anomaly(a)

@@ -233,6 +233,15 @@ class AlertBridge:
         if n_preempted >= self.PREEMPTION_STORM:
             self.emit("preemption_storm", n_preempted=n_preempted, step=step)
 
+    def on_anomaly(self, anomaly) -> None:
+        """Series anomaly from :class:`repro.obs.anomaly.AnomalyMonitor`
+        -- recorded as ``anomaly_<kind>`` so the triage layer can split
+        first-class anomalies from corroborating alerts."""
+        self.emit(f"anomaly_{anomaly.kind}", series=anomaly.series,
+                  step=anomaly.step, score=anomaly.score,
+                  direction=anomaly.direction, value=anomaly.value,
+                  baseline=anomaly.baseline)
+
     def on_ledger_events(self, events) -> None:
         """Alerts the :class:`StepLedger` detected (drop spikes, replans)."""
         for ev in events:

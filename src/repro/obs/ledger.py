@@ -162,9 +162,9 @@ class StepLedger:
                                     labels=("phase",))
         self._h_exposed = r.histogram("orch_exposed_ms",
                                       "host plan latency the step waited on")
-        self._c_tokens = r.counter("train_tokens_total", "tokens trained on")
-        self._c_steps = r.counter("train_steps_total", "train steps")
-        self._c_replans = r.counter("orch_replans_total",
+        self._c_tokens = r.counter("train_tokens", "tokens trained on")
+        self._c_steps = r.counter("train_steps", "train steps")
+        self._c_replans = r.counter("orch_replans",
                                     "stale plan-ahead plans re-planned")
         self._g_metric = r.gauge("train_metric", "last train-step metrics",
                                  labels=("name",))
@@ -210,6 +210,15 @@ class StepLedger:
                 self._h_solve.observe(ms, phase=phase)
             self._h_exposed.observe(report.exposed_ms)
             if step_ms:
+                if report.exposed_ms > step_ms:
+                    # goodput_fraction clamps exposed_ms to the step,
+                    # but waiting longer on the plan than the whole
+                    # step took means the two clocks disagree --
+                    # surface it instead of only clamping silently.
+                    events.append({"alert": "measurement_inconsistent",
+                                   "step": step,
+                                   "exposed_ms": float(report.exposed_ms),
+                                   "step_ms": float(step_ms)})
                 gp = goodput_fraction(step_ms, report.exposed_ms, mfu)
                 self._g_goodput.set(gp)
                 self._track("goodput_frac", step, gp)

@@ -340,6 +340,15 @@ class MetricsRegistry:
 
     def _family(self, name: str, kind: str, help: str,
                 labelnames: Sequence[str], **kw) -> MetricFamily:
+        # "_total" is an exposition-reserved suffix: the renderer appends
+        # it to counters, and the strict OpenMetrics parser treats any
+        # series carrying it as a counter.  Baking it into a family name
+        # either double-suffixes (counters) or miscategorizes (gauges).
+        if name.endswith("_total"):
+            raise ValueError(
+                f"metric name {name!r} must not end with '_total' "
+                "(reserved exposition suffix; the renderer adds it to "
+                "counters)")
         with self._lock:
             fam = self._families.get(name)
             if fam is None:

@@ -23,8 +23,9 @@ from typing import Iterable, Mapping, Sequence
 
 __all__ = ["build_timeline", "export_timeline"]
 
-# pid blocks so the three sources never collide.
+# pid blocks so the four sources never collide.
 _ENGINE_PID_BASE = 1000
+_CKPT_PID = 8000
 _COUNTER_PID = 9000
 
 
@@ -56,6 +57,33 @@ def _engine_events(step_timings: Iterable, replica: int = 0) -> list[dict]:
     return events
 
 
+def _checkpoint_events(ops: Iterable) -> list[dict]:
+    """CheckpointManager op log -> save/restore spans on their own pid.
+
+    Each op is a :class:`repro.checkpoint.CheckpointOp` (kind, step,
+    start_s, wall_ms); spans land at real offsets relative to the first
+    op, so a stalled step visibly overlaps its checkpoint save.
+    """
+    ops = list(ops)
+    events: list[dict] = [
+        {"name": "process_name", "ph": "M", "pid": _CKPT_PID,
+         "args": {"name": "checkpoint"}},
+        {"name": "thread_name", "ph": "M", "pid": _CKPT_PID, "tid": 0,
+         "args": {"name": "save/restore"}}]
+    if not ops:
+        return events
+    t0 = min(op.start_s for op in ops)
+    for op in ops:
+        events.append({
+            "name": f"{op.kind}@step{op.step}", "cat": "checkpoint",
+            "ph": "X", "pid": _CKPT_PID, "tid": 0,
+            "ts": (op.start_s - t0) * 1e6,  # chrome trace wants us
+            "dur": op.wall_ms * 1e3,
+            "args": {"step": op.step, "kind": op.kind,
+                     "wall_ms": op.wall_ms}})
+    return events
+
+
 def _counter_events(series: Mapping[str, Sequence[tuple[int, float]]],
                     step_ts_ms: Mapping[int, float] | None = None,
                     ) -> list[dict]:
@@ -80,24 +108,33 @@ def _counter_events(series: Mapping[str, Sequence[tuple[int, float]]],
 
 
 def build_timeline(*, trace_buffer=None, step_timings=None, ledger=None,
+                   waterfall=None, checkpoint_ops=None,
                    series: Mapping[str, Sequence[tuple[int, float]]] | None = None,
                    ) -> dict:
     """Merge every available source into one Chrome-trace JSON object.
 
     All arguments are optional, so each subsystem can be absent (a
     train-only run has no engine rows; a serving-only run has no
-    orchestrator spans).
+    orchestrator spans; checkpoint ops only exist when a
+    ``CheckpointManager`` ran).  ``waterfall`` is a
+    :class:`repro.obs.decompose.GapWaterfall` whose per-component
+    series join the counter tracks.
     """
     events: list[dict] = []
     if trace_buffer is not None:
         events.extend(trace_buffer.to_chrome_trace()["traceEvents"])
     if step_timings is not None:
         events.extend(_engine_events(step_timings))
+    if checkpoint_ops is not None:
+        events.extend(_checkpoint_events(checkpoint_ops))
     merged_series: dict[str, Sequence[tuple[int, float]]] = {}
     step_ts = None
     if ledger is not None:
         merged_series.update(ledger.series)
         step_ts = ledger.step_ts_ms
+    if waterfall is not None:
+        merged_series.update(
+            {f"waterfall_{k}": v for k, v in waterfall.series.items()})
     if series:
         merged_series.update(series)
     if merged_series:

@@ -1,0 +1,254 @@
+"""Root-cause triage: waterfall history + anomalies + alerts -> ranked
+explanation of a run's MFU gap.
+
+``python -m repro.obs.triage RUN`` (a ``--metrics-dir`` directory or a
+``flight.jsonl`` path) replays the flight record -- the ``waterfall``
+events the train loop records per step, the ``alert`` events routed
+through :class:`repro.obs.export.AlertBridge` (anomalies, CUSUM drift,
+replans, preemption storms, drop spikes, checkpoint fallbacks) -- and
+prints a ranked root-cause report, e.g.::
+
+    #1 straggler_audio (+6.2% of step time): imbalance_audio
+       level-shift @ step 120 (z=9.3); corroborated by
+       cost_model_drift@118, 3x stale_plan_replanned
+
+Ranking: each waterfall component's mean contribution AFTER the
+estimated fault step minus BEFORE it (its delta-gap, in fractions of
+the step), boosted by anomalies on that component's series and by
+corroborating alert kinds.  The ``unattributed`` residual is a
+first-class candidate -- when the flight record carries CUSUM
+``cost_model_drift`` alerts it is reported as ``cost_model_drift``
+(step time moved while the cost vectors did not: the cost model is
+stale), otherwise as ``unattributed_time``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Mapping, Sequence
+
+__all__ = ["CAUSE_OF_COMPONENT", "triage", "triage_flight",
+           "render_text", "main"]
+
+# Component -> canonical root-cause label.  imbalance_<phase> maps to
+# straggler_<phase> (one per modality/phase); everything else is 1:1.
+CAUSE_OF_COMPONENT = {
+    "exposed_dispatch": "dispatcher_exposed",
+    "checkpoint_stall": "checkpoint_stall",
+    "kernel_dead_tiles": "kernel_dead_tiles",
+    "moe_drop": "moe_drop_spike",
+    "preempt_recompute": "preemption_storm",
+    "unattributed": "unattributed_time",
+}
+
+# Alert kinds that corroborate a cause (alert -> cause label).
+ALERT_SUPPORTS = {
+    "stale_plan_replanned": "dispatcher_exposed",
+    "cost_model_drift": "cost_model_drift",
+    "moe_drop_spike": "moe_drop_spike",
+    "preemption_storm": "preemption_storm",
+    "checkpoint_corruption_fallback": "checkpoint_stall",
+    "measurement_inconsistent": "dispatcher_exposed",
+}
+
+_KIND_WEIGHT = {"level_shift": 1.0, "trend": 0.9, "spike": 0.5}
+_MIN_DELTA = 0.002  # components moving less than 0.2% of a step are noise
+
+
+def _cause_of(component: str) -> str:
+    if component.startswith("imbalance_"):
+        return "straggler_" + component[len("imbalance_"):]
+    return CAUSE_OF_COMPONENT.get(component, component)
+
+
+def _mean(xs: Sequence[float]) -> float:
+    xs = list(xs)
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+def triage(waterfall: Sequence[Mapping], *,
+           anomalies: Sequence[Mapping] = (),
+           alerts: Sequence[Mapping] = (),
+           meta: Mapping | None = None,
+           warmup: int = 3, window: int = 10) -> dict:
+    """Correlate a run's evidence into a ranked root-cause report.
+
+    ``waterfall`` is a sequence of :meth:`WaterfallStep.to_dict` rows
+    (ascending steps); ``anomalies`` dicts with at least
+    ``series/step/kind/score/direction``; ``alerts`` dicts with
+    ``alert/step``.  Returns a JSON-able report dict.
+    """
+    wf = [dict(w) for w in waterfall][warmup:]
+    if not wf:
+        return {"meta": dict(meta or {}), "fault_step": None, "causes": [],
+                "note": "no waterfall history"}
+    steps = [int(w["step"]) for w in wf]
+
+    # 1. Estimate the fault step: earliest sustained anomaly, falling
+    # back to spikes, falling back to the largest gap jump.
+    anoms = sorted((dict(a) for a in anomalies), key=lambda a: a["step"])
+    sustained = [a for a in anoms if a["kind"] in ("level_shift", "trend")]
+    if sustained:
+        fault_step = int(min(a["step"] for a in sustained))
+    elif anoms:
+        fault_step = int(min(a["step"] for a in anoms))
+    else:
+        gaps = [float(w["gap"]) for w in wf]
+        jumps = [gaps[i] - gaps[i - 1] for i in range(1, len(gaps))]
+        fault_step = (steps[jumps.index(max(jumps)) + 1]
+                      if jumps else steps[0])
+    before = [w for w in wf if int(w["step"]) < fault_step]
+    after = [w for w in wf if int(w["step"]) >= fault_step]
+    if not before or not after:  # fault at an edge: global split
+        mid = max(len(wf) // 2, 1)
+        before, after = wf[:mid], wf[mid:] or wf[:1]
+
+    # 2. Per-component delta-gap across the split (unattributed rides
+    # along as its own pseudo-component).
+    names: list[str] = []
+    for w in wf:
+        for n in w["components"]:
+            if n not in names:
+                names.append(n)
+    names.append("unattributed")
+
+    def comp_val(w: Mapping, name: str) -> float:
+        if name == "unattributed":
+            return float(w["unattributed"])
+        return float(w["components"].get(name, 0.0))
+
+    alert_counts: dict[str, int] = {}
+    alert_steps: dict[str, list[int]] = {}
+    for ev in alerts:
+        kind = str(ev.get("alert", ""))
+        if kind.startswith("anomaly"):
+            continue  # anomalies are first-class inputs, not corroboration
+        alert_counts[kind] = alert_counts.get(kind, 0) + 1
+        alert_steps.setdefault(kind, []).append(int(ev.get("step", -1)))
+
+    causes: list[dict] = []
+    for name in names:
+        delta = _mean([comp_val(w, name) for w in after]) - _mean(
+            [comp_val(w, name) for w in before])
+        cause = _cause_of(name)
+        evidence: list[str] = []
+        score = max(delta, 0.0)
+        # Anomalies on this component's series.
+        comp_anoms = [a for a in anoms if a["series"] == name]
+        for a in comp_anoms:
+            w = _KIND_WEIGHT.get(a["kind"], 0.3)
+            score += 0.5 * max(delta, 0.0) * w
+            evidence.append(
+                f"{name} {a['kind'].replace('_', '-')} @ step {a['step']} "
+                f"(z={a['score']:.1f})")
+        # Corroborating alert kinds.
+        if name == "unattributed" and alert_counts.get("cost_model_drift"):
+            cause = "cost_model_drift"
+        for kind, n in sorted(alert_counts.items()):
+            if ALERT_SUPPORTS.get(kind) != cause:
+                continue
+            score += 0.5 * max(delta, 0.0)
+            at = [s for s in alert_steps[kind] if s >= 0]
+            where = f"@ step {min(at)}" if at else ""
+            evidence.append(f"{n}x {kind} {where}".rstrip())
+        if delta < _MIN_DELTA and not comp_anoms:
+            continue
+        causes.append({
+            "cause": cause, "component": name, "delta_gap": delta,
+            "score": score, "fault_step": fault_step,
+            "anomaly_kinds": sorted({a["kind"] for a in comp_anoms}),
+            "evidence": evidence,
+        })
+    causes.sort(key=lambda c: c["score"], reverse=True)
+    for rank, c in enumerate(causes, start=1):
+        c["rank"] = rank
+
+    gap_before = _mean([float(w["gap"]) for w in before])
+    gap_after = _mean([float(w["gap"]) for w in after])
+    closure = [float(w["closure_err"]) for w in wf]
+    return {
+        "meta": dict(meta or {}),
+        "fault_step": fault_step,
+        "gap_before": gap_before,
+        "gap_after": gap_after,
+        "gap_delta": gap_after - gap_before,
+        "n_steps": len(wf),
+        "n_anomalies": len(anoms),
+        "n_alerts": sum(alert_counts.values()),
+        "closure_err_max": max(closure) if closure else 0.0,
+        "causes": causes,
+    }
+
+
+def triage_flight(events: Sequence[Mapping], **kw) -> dict:
+    """Triage straight from flight-recorder events (``read_flight_record``
+    output): ``waterfall`` events are the per-step history, ``alert``
+    events split into anomalies (``anomaly_*``) and corroboration."""
+    waterfall = [e for e in events if e.get("kind") == "waterfall"]
+    anomalies = [
+        {"series": e.get("series", ""), "step": int(e.get("step", 0)),
+         "kind": e["alert"][len("anomaly_"):], "score": float(e.get("score", 0.0)),
+         "direction": int(e.get("direction", 0))}
+        for e in events
+        if e.get("kind") == "alert" and str(e.get("alert", "")).startswith("anomaly_")]
+    alerts = [e for e in events
+              if e.get("kind") == "alert"
+              and not str(e.get("alert", "")).startswith("anomaly_")]
+    meta = next((e for e in events if e.get("kind") == "meta"), {})
+    meta = {k: v for k, v in meta.items() if k not in ("kind", "ts")}
+    return triage(waterfall, anomalies=anomalies, alerts=alerts, meta=meta,
+                  **kw)
+
+
+def render_text(report: Mapping) -> str:
+    """Human-readable rendering of a triage report."""
+    lines: list[str] = []
+    meta = report.get("meta") or {}
+    head = "MFU-gap triage"
+    if meta.get("arch"):
+        head += f" -- {meta['arch']}"
+    lines.append(head)
+    if report.get("fault_step") is None:
+        lines.append("  (no waterfall history; nothing to explain)")
+        return "\n".join(lines)
+    lines.append(
+        f"  gap {report['gap_before']:.1%} -> {report['gap_after']:.1%} "
+        f"({report['gap_delta']:+.1%}) around step {report['fault_step']}; "
+        f"{report['n_anomalies']} anomalies, {report['n_alerts']} alerts, "
+        f"closure err max {report['closure_err_max']:.1%}")
+    if not report["causes"]:
+        lines.append("  no cause moved more than the noise floor")
+    for c in report["causes"]:
+        lines.append(
+            f"  #{c['rank']} {c['cause']} ({c['delta_gap']:+.1%} of step "
+            f"time): component {c['component']}")
+        for ev in c["evidence"]:
+            lines.append(f"       {ev}")
+    return "\n".join(lines)
+
+
+def main(argv: Sequence[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(
+        description="rank the root causes of a run's MFU gap from its "
+                    "flight record")
+    ap.add_argument("run", help="--metrics-dir directory or flight.jsonl path")
+    ap.add_argument("--json", default=None,
+                    help="also write the report as JSON here")
+    ap.add_argument("--window", type=int, default=10)
+    args = ap.parse_args(argv)
+    path = args.run
+    if os.path.isdir(path):
+        path = os.path.join(path, "flight.jsonl")
+    from repro.obs.export import read_flight_record
+    report = triage_flight(read_flight_record(path), window=args.window)
+    print(render_text(report))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, default=str)
+        print(f"wrote {args.json}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -69,6 +69,11 @@ class StepTiming:
     n_prefill_seqs: int
     prefill_tokens: int  # tokens prefilled this step (recompute included)
     n_decode_seqs: int
+    # Attribution inputs for the MFU-gap waterfall (repro.obs.decompose):
+    # preemptions charged to this step's schedule and the recomputed
+    # (post-preemption re-prefill) share of prefill_tokens.
+    n_preempted: int = 0
+    recompute_tokens: int = 0
 
     def to_state_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -336,6 +341,8 @@ class Engine:
         decode -> lifecycle bookkeeping.  Returns the step's plan."""
         t0 = time.perf_counter()
         step = self.n_steps
+        pre_recompute = self.recompute_tokens
+        pre_preempt = sum(r.n_preemptions for r in self.requests)
         plan = self.scheduler.schedule(step, self.waiting, self.running,
                                        self.pool, seq_slots=self.seq_slots)
         t1 = time.perf_counter()
@@ -346,6 +353,7 @@ class Engine:
         if plan.decode:
             self._run_decode(plan.decode, step)
         t3 = time.perf_counter()
+        n_preempted = sum(r.n_preemptions for r in self.requests) - pre_preempt
         self.step_timings.append(StepTiming(
             step=step,
             schedule_ms=(t1 - t0) * 1e3,
@@ -353,7 +361,9 @@ class Engine:
             decode_ms=(t3 - t2) * 1e3,
             n_prefill_seqs=len(plan.prefill),
             prefill_tokens=prefill_tokens,
-            n_decode_seqs=len(plan.decode)))
+            n_decode_seqs=len(plan.decode),
+            n_preempted=n_preempted,
+            recompute_tokens=self.recompute_tokens - pre_recompute))
         self.n_steps += 1
         self.plans.append(plan)
         self.occupancy_samples.append(self.pool.occupancy)
@@ -361,11 +371,8 @@ class Engine:
         self._wall_s += time.perf_counter() - t0
         if self._h_occ is not None:
             self._h_occ.observe(self.pool.occupancy, replica=self.replica_id)
-            n_pre = sum(r.n_preemptions for r in self.requests)
-            if n_pre > self._n_preempt_seen:
-                self._c_preempt.inc(n_pre - self._n_preempt_seen,
-                                    replica=self.replica_id)
-                self._n_preempt_seen = n_pre
+            if n_preempted > 0:
+                self._c_preempt.inc(n_preempted, replica=self.replica_id)
         return plan
 
     def _prefill_groups(self, seqs: list[SequenceState],

@@ -1,0 +1,324 @@
+"""Cross-rank aggregation tests: GK sketch merge rank-error bound,
+registry merge == union stream, serialization round-trips, the strict
+OpenMetrics parser's rejection surface, and the live /metrics server.
+"""
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.obs import (MetricsRegistry, MetricsServer, QuantileSketch,
+                       aggregate_registries, merge_sketches,
+                       parse_openmetrics, registry_from_state_dict,
+                       registry_state_dict, render_openmetrics,
+                       validate_openmetrics)
+
+QS = (0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0)
+
+
+# ----------------------------------------------------------------------
+# GK sketch merge: the mergeable-summaries rank-error bound.
+# ----------------------------------------------------------------------
+def _assert_rank_error(sk, data, eps, qs=QS):
+    """Every quantile answer's true rank lies within eps*n (+1 discrete
+    slack) of the target rank over the UNION stream."""
+    xs = np.sort(np.asarray(data, dtype=np.float64))
+    n = len(xs)
+    assert sk.n == n, f"merged n {sk.n} != union n {n}"
+    for q in qs:
+        v = sk.quantile(q)
+        target = max(1, int(np.ceil(q * n)))
+        rank_lo = int(np.searchsorted(xs, v, side="left")) + 1
+        rank_hi = int(np.searchsorted(xs, v, side="right"))
+        margin = eps * n + 1
+        assert rank_lo - margin <= target <= rank_hi + margin, (
+            f"q={q}: answer {v} has rank [{rank_lo}, {rank_hi}], "
+            f"target {target}, margin {margin:.1f} (n={n})")
+
+
+def _merged(a_data, b_data, eps_a=0.005, eps_b=0.005):
+    a, b = QuantileSketch(eps=eps_a), QuantileSketch(eps=eps_b)
+    a.extend(a_data)
+    b.extend(b_data)
+    return merge_sketches(a, b)
+
+
+@pytest.mark.parametrize("split", [
+    "sorted_halves", "interleaved", "disjoint_ranges", "skewed_sizes",
+    "identical", "heavy_tail_vs_normal",
+])
+def test_merge_rank_error_adversarial_splits(split):
+    n = 10_000
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=2 * n)
+    a, b = {
+        # Each side sees a *sorted* half: worst case for per-sketch
+        # tuple placement.
+        "sorted_halves": (np.sort(base)[:n], np.sort(base)[n:]),
+        "interleaved": (np.sort(base)[0::2], np.sort(base)[1::2]),
+        "disjoint_ranges": (rng.uniform(0, 1, n), rng.uniform(100, 101, n)),
+        "skewed_sizes": (base[:40], base[40:]),
+        "identical": (np.full(n, 3.0), np.full(n, 3.0)),
+        "heavy_tail_vs_normal": (rng.lognormal(0, 3, n), rng.normal(size=n)),
+    }[split]
+    merged = _merged(a, b)
+    _assert_rank_error(merged, np.concatenate([a, b]), eps=0.005)
+
+
+def test_merge_preserves_max_eps():
+    rng = np.random.default_rng(1)
+    a, b = rng.normal(size=5_000), rng.uniform(-4, 4, 5_000)
+    merged = _merged(a, b, eps_a=0.002, eps_b=0.02)
+    assert merged.eps == 0.02
+    _assert_rank_error(merged, np.concatenate([a, b]), eps=0.02)
+
+
+def test_merge_empty_and_singleton():
+    empty = merge_sketches(QuantileSketch(eps=0.01), QuantileSketch(eps=0.02))
+    assert empty.n == 0 and empty.eps == 0.02
+    one = QuantileSketch()
+    one.add(5.0)
+    m = merge_sketches(one, QuantileSketch())
+    assert m.n == 1 and m.quantile(0.5) == 5.0
+    m = merge_sketches(QuantileSketch(), one)
+    assert m.n == 1 and m.quantile(0.5) == 5.0
+
+
+def test_merge_is_reusable_and_chains():
+    """Merging merged sketches (tree reduction over ranks) still meets
+    the bound -- the shape an aggregator over many ranks produces."""
+    rng = np.random.default_rng(2)
+    parts = [rng.normal(loc=i, size=2_000) for i in range(4)]
+    sks = []
+    for p in parts:
+        sk = QuantileSketch(eps=0.01)
+        sk.extend(p)
+        sks.append(sk)
+    merged = merge_sketches(merge_sketches(sks[0], sks[1]),
+                            merge_sketches(sks[2], sks[3]))
+    _assert_rank_error(merged, np.concatenate(parts), eps=0.01)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6), min_size=1,
+                max_size=300),
+       st.lists(st.floats(min_value=-1e6, max_value=1e6), min_size=0,
+                max_size=300))
+def test_merge_rank_error_property(xs, ys):
+    merged = _merged(xs, ys, eps_a=0.01, eps_b=0.01)
+    _assert_rank_error(merged, list(xs) + list(ys), eps=0.01,
+                       qs=(0.25, 0.5, 0.95))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=2,
+                max_size=400),
+       st.integers(min_value=0, max_value=400))
+def test_merge_split_point_property(xs, cut):
+    """Any split point of one stream merges back to the union bound."""
+    cut = min(cut, len(xs))
+    merged = _merged(xs[:cut], xs[cut:], eps_a=0.01, eps_b=0.01)
+    _assert_rank_error(merged, xs, eps=0.01, qs=(0.5, 0.9))
+
+
+# ----------------------------------------------------------------------
+# Registry aggregation == recording the union stream.
+# ----------------------------------------------------------------------
+def _rank_reg(rank, values):
+    reg = MetricsRegistry()
+    reg.counter("events", "e", labels=("shard",)).inc(
+        10.0 * (rank + 1), shard=str(rank))
+    reg.counter("events", "e", labels=("shard",)).inc(1.0, shard="all")
+    reg.gauge("util", "u").set(0.5 + 0.1 * rank)
+    h = reg.histogram("lat_ms", "l", buckets=(1.0, 10.0, 100.0, float("inf")))
+    for v in values:
+        h.observe(float(v))
+    return reg
+
+
+def test_aggregate_counters_and_histograms_equal_union():
+    rng = np.random.default_rng(3)
+    streams = [rng.exponential(scale=20.0, size=500) for _ in range(3)]
+    regs = [_rank_reg(r, streams[r]) for r in range(3)]
+    agg = aggregate_registries(regs)
+
+    # Counters: per-labelset sum; the shared "all" labelset sums across
+    # ranks while per-rank labelsets pass through.
+    fam = agg.get("events")
+    got = {tuple(labels.items()): child.value for labels, child in
+           fam.children()}
+    assert got[(("shard", "all"),)] == 3.0
+    assert got[(("shard", "0"),)] == 10.0
+    assert got[(("shard", "2"),)] == 30.0
+
+    # Histograms: bucket counts, _sum and _count equal one registry fed
+    # the union stream; quantiles within the sketch bound.
+    union = np.concatenate(streams)
+    ref = MetricsRegistry()
+    rh = ref.histogram("lat_ms", "l", buckets=(1.0, 10.0, 100.0, float("inf")))
+    for v in union:
+        rh.observe(float(v))
+    got_h = agg.get("lat_ms").labels()
+    ref_child = ref.get("lat_ms").labels()
+    assert got_h.bucket_counts() == ref_child.bucket_counts()
+    assert got_h.count == len(union)
+    assert got_h.sum == pytest.approx(float(union.sum()))
+    xs = np.sort(union)
+    for q in (0.5, 0.95):
+        v = got_h.quantile(q)
+        target = max(1, int(np.ceil(q * len(xs))))
+        lo = int(np.searchsorted(xs, v, "left")) + 1
+        hi = int(np.searchsorted(xs, v, "right"))
+        margin = 0.005 * len(xs) + 1
+        assert lo - margin <= target <= hi + margin
+
+
+def test_aggregate_gauge_modes():
+    regs = []
+    for v in (1.0, 2.0, 4.0):
+        reg = MetricsRegistry()
+        reg.gauge("util", "u").set(v)
+        regs.append(reg)
+    mean = aggregate_registries(regs, gauge_mode="mean")
+    assert mean.get("util").labels().value == pytest.approx(7.0 / 3.0)
+    total = aggregate_registries(regs, gauge_mode="sum")
+    assert total.get("util").labels().value == 7.0
+    last = aggregate_registries(regs, gauge_mode="last")
+    assert last.get("util").labels().value == 4.0
+    with pytest.raises(ValueError, match="gauge_mode"):
+        aggregate_registries(regs, gauge_mode="max")
+
+
+def test_aggregate_gauge_mean_divides_by_contributors():
+    """A gauge present on only 2 of 3 ranks means over 2, not 3."""
+    regs = [MetricsRegistry() for _ in range(3)]
+    regs[0].gauge("partial", "p").set(1.0)
+    regs[1].gauge("partial", "p").set(3.0)
+    agg = aggregate_registries(regs, gauge_mode="mean")
+    assert agg.get("partial").labels().value == 2.0
+
+
+def test_aggregate_rejects_mismatched_buckets():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.histogram("h", "h", buckets=(1.0, float("inf"))).labels().observe(0.5)
+    b.histogram("h", "h", buckets=(2.0, float("inf"))).labels().observe(0.5)
+    with pytest.raises(ValueError, match="bucket layouts differ"):
+        aggregate_registries([a, b])
+
+
+def test_registry_state_dict_json_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("c", "c", labels=("k",)).inc(5.0, k="x")
+    reg.gauge("g", "g").set(-1.5)
+    h = reg.histogram("h", "h", buckets=(1.0, 5.0, float("inf")))
+    for v in np.random.default_rng(4).uniform(0, 10, 300):
+        h.labels().observe(float(v))
+    clone = registry_from_state_dict(
+        json.loads(json.dumps(registry_state_dict(reg))))
+    assert render_openmetrics(clone) == render_openmetrics(reg)
+    # And the clone merges like the original (sketch survived).
+    agg = aggregate_registries([reg, clone])
+    assert agg.get("c").labels(k="x").value == 10.0
+    assert agg.get("h").labels().count == 600
+
+
+# ----------------------------------------------------------------------
+# Strict OpenMetrics parsing.
+# ----------------------------------------------------------------------
+def test_parser_accepts_rendered_registry():
+    reg = MetricsRegistry()
+    reg.counter("req", "r", labels=("code",)).inc(3.0, code="200")
+    reg.gauge("temp", "t").set(-3.5)
+    h = reg.histogram("lat", "l", buckets=(0.1, 1.0, float("inf")))
+    for v in (0.05, 0.5, 2.0):
+        h.labels().observe(v)
+    samples = parse_openmetrics(render_openmetrics(reg))
+    assert samples['req_total{code="200"}'] == 3.0
+    assert samples["lat_count{}"] == 3.0
+    assert samples['lat_bucket{le="+Inf"}'] == 3.0
+
+
+@pytest.mark.parametrize("text,match", [
+    ("a 1\na 2\n# EOF\n", "duplicate series"),
+    ('h_bucket{le="5"} 1\nh_bucket{le="1"} 2\n# EOF\n', "out of order"),
+    ('h_bucket{le="1"} 5\nh_bucket{le="+Inf"} 3\n# EOF\n', "decreases"),
+    ('h_bucket{le="1"} 1\n# EOF\n', "no \\+Inf bucket"),
+    ('h_bucket{le="+Inf"} 3\nh_count 4\n# EOF\n', "!= _count"),
+    ("reqs_total -1\n# EOF\n", "invalid value"),
+    ("a 1\n", "missing # EOF"),
+    ("garbage line here\n# EOF\n", "unparsable|malformed"),
+    ("# EOF\nafter 1\n", "after # EOF"),
+    ("# TYPE x wrong\n# EOF\n", "malformed TYPE"),
+    ('bad{label="x"extra} 1\n# EOF\n', "malformed labels"),
+])
+def test_parser_rejections(text, match):
+    with pytest.raises(ValueError, match=match):
+        parse_openmetrics(text)
+
+
+def test_validate_counter_monotonicity_across_scrapes():
+    first = parse_openmetrics("steps_total 5\n# EOF\n")
+    validate_openmetrics("steps_total 7\n# EOF\n", previous=first)
+    validate_openmetrics("steps_total 5\n# EOF\n", previous=first)  # equal ok
+    with pytest.raises(ValueError, match="went backwards"):
+        validate_openmetrics("steps_total 4\n# EOF\n", previous=first)
+
+
+# ----------------------------------------------------------------------
+# Live HTTP exporter.
+# ----------------------------------------------------------------------
+def _get(url):
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        return resp.status, resp.read().decode()
+
+
+def test_metrics_server_serves_aggregated_view():
+    regs = [MetricsRegistry() for _ in range(2)]
+    for i, reg in enumerate(regs):
+        reg.counter("steps", "s").inc(float(i + 1))
+        reg.gauge("mfu", "m").set(0.8)
+    report = {"fault_step": 7, "causes": [{"cause": "straggler_llm"}]}
+    with MetricsServer(lambda: aggregate_registries(regs),
+                       triage_provider=lambda: report) as srv:
+        status, body = _get(srv.url + "/metrics")
+        assert status == 200
+        first = validate_openmetrics(body)
+        assert first["steps_total{}"] == 3.0
+        assert first["mfu{}"] == 0.8
+        # Counters move; the next scrape must stay monotone.
+        regs[0].get("steps").inc(5.0)
+        _, body2 = _get(srv.url + "/metrics")
+        second = validate_openmetrics(body2, previous=first)
+        assert second["steps_total{}"] == 8.0
+        status, triage_body = _get(srv.url + "/triage")
+        assert status == 200
+        assert json.loads(triage_body)["causes"][0]["cause"] == "straggler_llm"
+        status, _ = _get(srv.url + "/healthz")
+        assert status == 200
+        with pytest.raises(urllib.error.HTTPError):
+            _get(srv.url + "/nope")
+
+
+def test_metrics_server_no_triage_provider_404s():
+    reg = MetricsRegistry()
+    with MetricsServer(lambda: reg) as srv:
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _get(srv.url + "/triage")
+        assert e.value.code == 404
+
+
+def test_metrics_server_render_error_is_500_not_crash():
+    def bad():
+        raise RuntimeError("boom")
+
+    with MetricsServer(bad) as srv:
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _get(srv.url + "/metrics")
+        assert e.value.code == 500
+        # The server thread survived the error.
+        status, _ = _get(srv.url + "/healthz")
+        assert status == 200

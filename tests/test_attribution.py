@@ -1,0 +1,351 @@
+"""Attribution-engine tests: the MFU-gap waterfall's component algebra
+and closure check, the online anomaly detectors, and the triage
+correlator (including the flight-record and CLI paths).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (AnomalyMonitor, FlightRecorder, GapWaterfall,
+                       MetricsRegistry, SeriesDetector, read_flight_record,
+                       render_text, triage, triage_flight)
+from repro.obs.triage import main as triage_main
+
+
+class FakeReport:
+    def __init__(self, phase_costs, exposed_ms=0.0):
+        self.phase_costs = {k: np.asarray(v, dtype=np.float64)
+                            for k, v in phase_costs.items()}
+        self.exposed_ms = exposed_ms
+
+
+SCALE = 0.05  # ms per cost unit used to synthesize step times
+
+
+def _observe_steady(wf, steps, *, costs=None, **kw):
+    costs = costs or {"vision": [10.0, 10.0], "llm": [40.0, 40.0]}
+    sum_max = sum(max(v) for v in costs.values())
+    last = None
+    for it in range(steps):
+        last = wf.observe(it, report=FakeReport(costs),
+                          step_ms=sum_max * SCALE, **kw)
+    return last
+
+
+# ----------------------------------------------------------------------
+# Waterfall algebra.
+# ----------------------------------------------------------------------
+def test_waterfall_balanced_step_has_zero_gap_and_closes():
+    wf = GapWaterfall(registry=MetricsRegistry())
+    last = _observe_steady(wf, 6)
+    assert last.gap == pytest.approx(0.0, abs=1e-9)
+    assert last.goodput == pytest.approx(1.0)
+    for v in last.components.values():
+        assert v == pytest.approx(0.0, abs=1e-9)
+    c = wf.closure()
+    assert c["steps"] == 3  # warmup skipped
+    assert c["max_closure_err"] == pytest.approx(0.0, abs=1e-9)
+
+
+def test_waterfall_imbalance_split_per_phase():
+    wf = GapWaterfall(registry=MetricsRegistry())
+    _observe_steady(wf, 4)  # calibrate scale on balanced steps
+    costs = {"vision": [10.0, 30.0], "llm": [40.0, 40.0]}
+    step_ms = (30.0 + 40.0) * SCALE
+    last = wf.observe(10, report=FakeReport(costs), step_ms=step_ms)
+    # vision straggler: (max - mean) * scale / T = 10 * .05 / 3.5
+    assert last.components["imbalance_vision"] == pytest.approx(
+        10.0 * SCALE / step_ms, rel=1e-6)
+    assert last.components["imbalance_llm"] == pytest.approx(0.0, abs=1e-9)
+    # additive closure: gap == sum(components) + unattributed
+    total = sum(last.components.values()) + last.unattributed
+    assert last.gap == pytest.approx(total, abs=1e-9)
+
+
+def test_waterfall_host_components_and_waste():
+    wf = GapWaterfall(registry=MetricsRegistry())
+    _observe_steady(wf, 4)
+    costs = {"llm": [40.0, 40.0]}
+    step_ms = 40.0 * SCALE + 1.0 + 0.5  # compute + exposed + ckpt
+    last = wf.observe(11, report=FakeReport(costs, exposed_ms=1.0),
+                      step_ms=step_ms, ckpt_ms=0.5, dead_tile_frac=0.1,
+                      metrics={"moe_dropped_frac": 0.05},
+                      recompute_frac=0.02)
+    assert last.components["exposed_dispatch"] == pytest.approx(
+        1.0 / step_ms)
+    assert last.components["checkpoint_stall"] == pytest.approx(
+        0.5 / step_ms)
+    useful_raw = 40.0 * last.scale_ms_per_cost / step_ms
+    assert last.components["kernel_dead_tiles"] == pytest.approx(
+        0.1 * useful_raw)
+    assert last.components["moe_drop"] == pytest.approx(0.05 * useful_raw)
+    assert last.components["preempt_recompute"] == pytest.approx(
+        0.02 * useful_raw)
+    assert last.goodput == pytest.approx(useful_raw * (1 - 0.1 - 0.05 - 0.02))
+
+
+def test_waterfall_drift_lands_in_unattributed():
+    """Step time moves without the cost vectors moving -> the scale
+    learned on earlier steps cannot explain the step, and the residual
+    (not some named component) absorbs it.  This is what makes the
+    closure check catch cost-model drift."""
+    wf = GapWaterfall(registry=MetricsRegistry())
+    _observe_steady(wf, 6)
+    costs = {"vision": [10.0, 10.0], "llm": [40.0, 40.0]}
+    last = wf.observe(20, report=FakeReport(costs),
+                      step_ms=50.0 * SCALE * 2.0)  # 2x slower, same costs
+    assert last.unattributed == pytest.approx(0.5, abs=0.05)
+    assert last.closure_err > 0.2
+    for name, v in last.components.items():
+        assert abs(v) < 0.05, (name, v)
+
+
+def test_waterfall_warmup_closure_is_zero_and_gauges_publish():
+    reg = MetricsRegistry()
+    wf = GapWaterfall(registry=reg, warmup=3)
+    wf.observe(0, report=FakeReport({"llm": [1.0, 3.0]}), step_ms=7.0)
+    assert wf.history[0].closure_err == 0.0
+    assert reg.get("mfu_gap").labels().value == wf.history[0].gap
+    comp = reg.get("mfu_gap_component")
+    got = {labels["component"]: child.value
+           for labels, child in comp.children()}
+    assert "imbalance_llm" in got and "unattributed" in got
+    assert reg.get("mfu_gap_closure_err").labels().value == 0.0
+
+
+def test_waterfall_rejects_nonpositive_step():
+    wf = GapWaterfall(registry=MetricsRegistry())
+    with pytest.raises(ValueError, match="step_ms"):
+        wf.observe(0, phase_costs={"llm": [1.0]}, step_ms=0.0)
+
+
+def test_waterfall_series_and_summary():
+    wf = GapWaterfall(registry=MetricsRegistry())
+    _observe_steady(wf, 5)
+    assert [s for s, _ in wf.series["gap"]] == list(range(5))
+    summ = wf.summary()
+    assert summ["gap"] == pytest.approx(0.0, abs=1e-9)
+    assert "component_imbalance_llm" in summ
+    assert summ["steps"] == 2  # closure() fields merged in
+
+
+# ----------------------------------------------------------------------
+# Anomaly detectors.
+# ----------------------------------------------------------------------
+def _feed(det, values, start=0):
+    out = []
+    for i, v in enumerate(values):
+        a = det.update(start + i, v, name="s")
+        if a is not None:
+            out.append(a)
+    return out
+
+
+def test_detector_quiet_on_stationary_noise():
+    rng = np.random.default_rng(0)
+    det = SeriesDetector()
+    anomalies = _feed(det, 0.3 + 0.002 * rng.standard_normal(200))
+    assert anomalies == []
+
+
+def test_detector_spike_then_return():
+    det = SeriesDetector()
+    base = [0.3] * 20
+    anomalies = _feed(det, base + [0.9] + [0.3] * 10)
+    kinds = [a.kind for a in anomalies]
+    assert kinds == ["spike"]
+    assert anomalies[0].step == 20
+    assert anomalies[0].direction == 1
+
+
+def test_detector_level_shift_alerts_once_then_rebaselines():
+    det = SeriesDetector()
+    anomalies = _feed(det, [0.3] * 20 + [0.6] * 40)
+    kinds = [a.kind for a in anomalies]
+    assert kinds.count("level_shift") == 1
+    shift = next(a for a in anomalies if a.kind == "level_shift")
+    # fires after shift_run consecutive out-of-band points
+    assert 20 <= shift.step <= 20 + det.shift_run
+    assert shift.baseline == pytest.approx(0.3, abs=0.05)
+
+
+def test_detector_trend():
+    # Ramp slow enough that the Huber-tracked center + adaptive scale
+    # keep each point inside the shift band, but fast enough that the
+    # fast EWMA sits > trend_z above baseline for trend_run steps.
+    det = SeriesDetector()
+    ramp = [0.3 + 0.004 * i for i in range(1, 81)]
+    anomalies = _feed(det, [0.3] * 20 + ramp)
+    kinds = [a.kind for a in anomalies]
+    assert "trend" in kinds, kinds
+    assert "level_shift" not in kinds  # too gradual for the band
+
+
+def test_monitor_cursor_include_and_registry():
+    reg = MetricsRegistry()
+    rec = []
+
+    class Sink:
+        def on_anomaly(self, a):
+            rec.append(a)
+
+    mon = AnomalyMonitor(alerts=Sink(), registry=reg, include=("gap",))
+    series = {"gap": [(i, 0.3) for i in range(30)],
+              "ignored_series": [(i, 99.0 if i == 25 else 0.0)
+                                 for i in range(30)]}
+    mon.poll(series)
+    series["gap"].extend([(30 + i, 0.9) for i in range(10)])
+    mon.poll(series)  # cursor: only the new points are consumed
+    kinds = [a.kind for a in mon.anomalies]
+    assert "level_shift" in kinds
+    assert all(a.series == "gap" for a in mon.anomalies)
+    assert rec == mon.anomalies  # routed to the alert sink
+    fam = reg.get("anomalies")
+    total = sum(child.value for _, child in fam.children())
+    assert total == len(mon.anomalies) >= 1
+
+
+def test_monitor_update_path_matches_poll():
+    mon = AnomalyMonitor(alerts=None, registry=MetricsRegistry())
+    for i in range(30):
+        mon.update(i, {"gap": 0.3})
+    for i in range(10):
+        mon.update(30 + i, {"gap": 0.9})
+    assert any(a.kind == "level_shift" for a in mon.anomalies)
+
+
+# ----------------------------------------------------------------------
+# Triage.
+# ----------------------------------------------------------------------
+def _faulted_waterfall(component, *, magnitude=0.25, steps=30, fault=15,
+                       extra=None):
+    """Synthesize waterfall dicts with one component stepping up."""
+    rng = np.random.default_rng(1)
+    out = []
+    for i in range(steps):
+        comps = {"imbalance_llm": 0.01, "imbalance_vision": 0.005,
+                 "exposed_dispatch": 0.01, "checkpoint_stall": 0.0,
+                 "kernel_dead_tiles": 0.02, "moe_drop": 0.0,
+                 "preempt_recompute": 0.0}
+        comps = {k: v + 0.001 * rng.standard_normal() for k, v in
+                 comps.items()}
+        unattr = 0.002 * rng.standard_normal()
+        if i >= fault:
+            if component == "unattributed":
+                unattr += magnitude
+            else:
+                comps[component] += magnitude
+        gap = sum(comps.values()) + unattr
+        out.append({"step": i, "step_ms": 10.0, "gap": gap,
+                    "goodput": 1.0 - gap, "components": comps,
+                    "unattributed": unattr,
+                    "closure_err": abs(unattr) / max(gap, 0.02),
+                    "scale_ms_per_cost": 0.05})
+    return out
+
+
+def _anoms_for(series, fault, kind="level_shift"):
+    return [{"series": series, "step": fault + 2, "kind": kind,
+             "value": 0.3, "baseline": 0.01, "score": 8.0,
+             "direction": "up"}]
+
+
+@pytest.mark.parametrize("component,cause", [
+    ("imbalance_llm", "straggler_llm"),
+    ("imbalance_vision", "straggler_vision"),
+    ("exposed_dispatch", "dispatcher_exposed"),
+    ("checkpoint_stall", "checkpoint_stall"),
+    ("kernel_dead_tiles", "kernel_dead_tiles"),
+    ("moe_drop", "moe_drop_spike"),
+    ("preempt_recompute", "preemption_storm"),
+])
+def test_triage_roots_each_component(component, cause):
+    steps = _faulted_waterfall(component)
+    rep = triage(steps, anomalies=_anoms_for(component, 15))
+    assert rep["causes"], rep
+    assert rep["causes"][0]["cause"] == cause
+    assert rep["causes"][0]["rank"] == 1
+    assert rep["fault_step"] == 17  # earliest sustained anomaly
+    assert rep["gap_delta"] == pytest.approx(0.25, abs=0.05)
+
+
+def test_triage_drift_renames_unattributed_with_alert():
+    steps = _faulted_waterfall("unattributed")
+    alerts = [{"alert": "cost_model_drift", "step": 16}]
+    rep = triage(steps, anomalies=_anoms_for("unattributed", 15),
+                 alerts=alerts)
+    assert rep["causes"][0]["cause"] == "cost_model_drift"
+    assert "cost_model_drift" in rep["causes"][0]["anomaly_kinds"] or \
+        rep["causes"][0]["evidence"]
+
+
+def test_triage_alert_corroboration_breaks_ties():
+    steps = _faulted_waterfall("exposed_dispatch", magnitude=0.1)
+    # equal-magnitude bump on a second component
+    for d in steps:
+        if d["step"] >= 15:
+            d["components"]["moe_drop"] += 0.1
+            d["gap"] += 0.1
+    alerts = [{"alert": "stale_plan_replanned", "step": 16}]
+    rep = triage(steps, anomalies=_anoms_for("exposed_dispatch", 15),
+                 alerts=alerts)
+    assert rep["causes"][0]["cause"] == "dispatcher_exposed"
+
+
+def test_triage_healthy_run_reports_nothing():
+    steps = _faulted_waterfall("imbalance_llm", magnitude=0.0)
+    rep = triage(steps)
+    assert rep["causes"] == []
+    assert rep["fault_step"] is None or rep["gap_delta"] < 0.01
+
+
+def test_triage_empty_history():
+    rep = triage([])
+    assert rep["causes"] == [] and rep["fault_step"] is None
+
+
+def test_render_text_smoke():
+    steps = _faulted_waterfall("imbalance_llm")
+    rep = triage(steps, anomalies=_anoms_for("imbalance_llm", 15),
+                 meta={"arch": "olmo_1b"})
+    text = render_text(rep)
+    assert "straggler_llm" in text
+    assert "#1" in text or "1." in text
+
+
+# ----------------------------------------------------------------------
+# Flight-record round trip + CLI.
+# ----------------------------------------------------------------------
+def _write_flight(tmp_path):
+    path = tmp_path / "flight.jsonl"
+    rec = FlightRecorder(path, meta={"run": "t"})
+    for d in _faulted_waterfall("imbalance_llm"):
+        rec.record("waterfall", **d)
+    # Anomalies land in the flight record as AlertBridge "anomaly_<kind>"
+    # alert events; triage_flight splits them back out.
+    rec.record("alert", alert="anomaly_level_shift", series="imbalance_llm",
+               step=17, score=8.0, direction=1)
+    rec.record("alert", alert="stale_plan_replanned", step=16)
+    rec.close()
+    return path
+
+
+def test_triage_flight_round_trip(tmp_path):
+    path = _write_flight(tmp_path)
+    rep = triage_flight(read_flight_record(path))
+    assert rep["causes"][0]["cause"] == "straggler_llm"
+    assert rep["n_anomalies"] == 1 and rep["n_alerts"] == 1
+
+
+def test_triage_cli_on_flight_file_and_dir(tmp_path, capsys):
+    path = _write_flight(tmp_path)
+    out_json = tmp_path / "report.json"
+    triage_main([str(path), "--json", str(out_json)])
+    text = capsys.readouterr().out
+    assert "straggler_llm" in text
+    rep = json.loads(out_json.read_text())
+    assert rep["causes"][0]["cause"] == "straggler_llm"
+    # directory form: resolves <dir>/flight.jsonl
+    triage_main([str(tmp_path)])
+    assert "straggler_llm" in capsys.readouterr().out

@@ -15,11 +15,12 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.obs import (AlertBridge, FlightRecorder, MetricsRegistry,
-                       QuantileSketch, StepLedger, build_timeline,
-                       get_registry, goodput_fraction, phase_imbalance,
-                       read_flight_record, render_openmetrics, set_registry,
-                       simulated_mfu, straggler_overhead, write_openmetrics)
+from repro.obs import (AlertBridge, FlightRecorder, GapWaterfall,
+                       MetricsRegistry, QuantileSketch, StepLedger,
+                       build_timeline, get_registry, goodput_fraction,
+                       phase_imbalance, read_flight_record,
+                       render_openmetrics, set_registry, simulated_mfu,
+                       straggler_overhead, write_openmetrics)
 
 # ----------------------------------------------------------------------
 # Quantile sketch: GK rank-error guarantee on adversarial streams.
@@ -290,8 +291,8 @@ def test_step_ledger_records_series_and_alerts():
     # below-threshold drop fraction stays quiet
     assert led.record_step(2, metrics={"moe_dropped_frac": 0.01}) == []
 
-    assert reg.get("train_steps_total").labels().value == 3.0
-    assert reg.get("train_tokens_total").labels().value == 128.0
+    assert reg.get("train_steps").labels().value == 3.0
+    assert reg.get("train_tokens").labels().value == 128.0
     mfu = reg.get("train_mfu_simulated").labels().value
     assert 0.0 < mfu < 1.0
     assert reg.get("train_metric").labels(name="loss").value == 2.5
@@ -454,6 +455,54 @@ def test_timeline_includes_orchestrator_trace_spans():
     doc = build_timeline(trace_buffer=buf)
     spans = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
     assert {e["name"] for e in spans} >= {"llm/plan", "vision/exec"}
+
+
+def test_ledger_flags_inconsistent_clocks():
+    """exposed_ms > step_ms means the host and step clocks disagree;
+    the ledger must surface that as an alert event, not clamp silently."""
+    led = StepLedger(d=2, registry=MetricsRegistry())
+    rep = _fake_report({"llm": [1.0, 1.0]}, exposed_ms=25.0)
+    events = led.record_step(0, report=rep, step_ms=10.0)
+    bad = [e for e in events if e["alert"] == "measurement_inconsistent"]
+    assert len(bad) == 1
+    assert bad[0]["exposed_ms"] == 25.0 and bad[0]["step_ms"] == 10.0
+    # the clamp still applies to the goodput gauge itself
+    assert 0.0 <= led.series["goodput_frac"][-1][1] <= 1.0
+
+
+def test_timeline_checkpoint_track_and_waterfall_counters():
+    from repro.checkpoint import CheckpointOp
+
+    ops = [CheckpointOp(kind="save", step=4, start_s=100.0, wall_ms=30.0),
+           CheckpointOp(kind="restore", step=4, start_s=102.0, wall_ms=12.0)]
+    wf = GapWaterfall(registry=MetricsRegistry())
+    wf.observe(0, phase_costs={"llm": [1.0, 2.0]}, step_ms=5.0)
+    doc = build_timeline(checkpoint_ops=ops, waterfall=wf)
+    evs = doc["traceEvents"]
+    spans = [e for e in evs if e.get("ph") == "X"]
+    # checkpoint ops render on their own pid, at real relative offsets
+    save = next(e for e in spans if e["name"] == "save@step4")
+    restore = next(e for e in spans if e["name"] == "restore@step4")
+    assert save["pid"] == restore["pid"] == 8000
+    assert save["ts"] == 0.0 and restore["ts"] == pytest.approx(2e6)
+    assert save["dur"] == pytest.approx(30e3)
+    metas = [e for e in evs if e.get("ph") == "M"]
+    assert any(e["args"]["name"] == "checkpoint" for e in metas)
+    # waterfall series join the counter pid under a waterfall_ prefix
+    counters = {e["name"] for e in evs if e.get("ph") == "C"}
+    assert {"waterfall_gap", "waterfall_imbalance_llm"} <= counters
+
+
+def test_step_timing_carries_preemption_fields():
+    from repro.serving.engine.engine import StepTiming
+
+    t = StepTiming(step=0, schedule_ms=0.1, prefill_ms=0.0, decode_ms=0.2,
+                   n_prefill_seqs=0, prefill_tokens=0, n_decode_seqs=1)
+    assert t.n_preempted == 0 and t.recompute_tokens == 0  # defaults
+    t2 = StepTiming(step=1, schedule_ms=0.1, prefill_ms=0.0, decode_ms=0.2,
+                    n_prefill_seqs=0, prefill_tokens=0, n_decode_seqs=1,
+                    n_preempted=2, recompute_tokens=96)
+    assert t2.n_preempted == 2 and t2.recompute_tokens == 96
 
 
 # ----------------------------------------------------------------------
