@@ -35,6 +35,14 @@ Metrics and their bands:
                                                waterfall closure and live
                                                /metrics validity flags
                                                must hold
+  pipeline     bubble_fill_fraction            deterministic seeded plan:
+                                               medium band + the >= 0.5
+                                               contract as abs floor
+               projected_mfu_uplift            fill-vs-no-fill MFU delta;
+                                               must stay positive (flag)
+                                               and within band; pipeline-
+                                               mode waterfall closure
+                                               flag must hold
 
 Usage:
     python -m benchmarks.check_regression --fresh-dir /tmp
@@ -119,6 +127,14 @@ METRICS = [
     Metric("BENCH_triage", "triage_top1_accuracy",
            lambda d: float(d["headline"]["triage_top1_accuracy"]),
            rel_tol=0.1, abs_floor=0.75),
+    # Pipeline bubble fill: seeded plan-only runs are deterministic;
+    # the abs floor is the docs/pipeline.md >= 0.5 fill contract.
+    Metric("BENCH_pipeline", "bubble_fill_fraction",
+           lambda d: float(d["headline"]["bubble_fill_fraction"]),
+           rel_tol=0.15, abs_floor=0.5),
+    Metric("BENCH_pipeline", "projected_mfu_uplift",
+           lambda d: float(d["headline"]["projected_mfu_uplift"]),
+           rel_tol=0.25, abs_floor=0.02),
 ]
 
 FLAGS = [
@@ -146,6 +162,12 @@ FLAGS = [
     # Live aggregated /metrics endpoint parses strictly across scrapes.
     Flag("BENCH_triage", "metrics_endpoint_valid",
          lambda d: bool(d["headline"]["metrics_endpoint_valid"])),
+    # Bubble fill must never cost MFU, and the pipeline-mode waterfall
+    # (pipeline_bubble_s{k} components) must stay closure-checked <= 5%.
+    Flag("BENCH_pipeline", "mfu_uplift_positive",
+         lambda d: float(d["headline"]["projected_mfu_uplift"]) > 0.0),
+    Flag("BENCH_pipeline", "waterfall_closure_ok",
+         lambda d: bool(d["headline"]["waterfall_closure_ok"])),
 ]
 
 

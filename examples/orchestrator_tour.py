@@ -7,7 +7,14 @@ and after post-balancing, the rearrangements, the composed plan
 rearrangement's inter-node reduction (Eq. 5).
 
     PYTHONPATH=src python examples/orchestrator_tour.py
+
+With --pp 4 the tour adds the pipeline-mode step: the 1F1B microbatch
+schedule over the post-balanced shard, the per-stage layer partition
+and the encoder bubble-fill result (docs/pipeline.md).  The rest of the
+machinery is documented in docs/architecture.md.
 """
+import argparse
+
 import numpy as np
 
 from repro.configs import get_config
@@ -16,6 +23,11 @@ from repro.data.synthetic import sample_examples
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages; >1 appends the 1F1B + "
+                         "bubble-fill schedule step (docs/pipeline.md)")
+    args = ap.parse_args()
     cfg = get_config("mllm_10b")
     d, c = 16, 4  # 16 DP instances, 4 per node
     rng = np.random.default_rng(7)
@@ -32,7 +44,8 @@ def main():
 
     for balance in (False, True):
         orch = MLLMGlobalOrchestrator(cfg, d, balance=balance,
-                                      instances_per_node=c, vocab=512)
+                                      instances_per_node=c, vocab=512,
+                                      pp=args.pp if balance else 1)
         caps = orch.default_capacities(examples, margin=3.0)
         _, rep = orch.plan_and_pack(examples, caps, rng)
         tag = "post-balanced" if balance else "as-sampled   "
@@ -50,6 +63,15 @@ def main():
                       f"(node-wise ILP applied)")
             print(f"4. dispatcher solve time: {rep.solve_ms:.1f} ms "
                   f"(overlapped with forward pass per S6)")
+            if rep.pipeline is not None:
+                p = rep.pipeline
+                print("5. pipeline schedule: 1F1B + encoder bubble-fill "
+                      "(docs/pipeline.md)")
+                print(f"   stages={p.pp} microbatches={p.n_micro} "
+                      f"layers/stage={list(p.partition)}")
+                print(f"   bubble filled {p.fill_fraction:.1%}; projected "
+                      f"MFU {p.projected_mfu_nofill:.3f} -> "
+                      f"{p.projected_mfu:.3f} (+{p.mfu_uplift:.3f})")
 
 
 if __name__ == "__main__":

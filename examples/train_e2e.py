@@ -8,6 +8,12 @@ balanced packed batches, AdamW, cosine schedule.
 On this CPU container a step takes a few seconds; pass --steps 20 for a
 quick check.  (On TPU the same script runs under the production mesh via
 repro.launch.train.)
+
+Pass --pp 2 (or more) to additionally plan the 1F1B pipeline schedule
+with encoder bubble-fill each step and print the reclaimed-bubble
+fraction and projected MFU uplift -- see docs/pipeline.md for the
+schedule model and docs/architecture.md for where the planner sits in
+the stack.
 """
 import argparse
 import dataclasses
@@ -56,13 +62,19 @@ def main():
     ap.add_argument("--d", type=int, default=4)
     ap.add_argument("--per", type=int, default=6)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages; >1 plans 1F1B + encoder "
+                         "bubble-fill per step (docs/pipeline.md)")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="microbatches per pipeline iteration (0: 2*pp)")
     args = ap.parse_args()
 
     cfg = build_cfg()
     n_params = cfg.param_count()
     print(f"model: {cfg.name}  params~{n_params/1e6:.0f}M")
 
-    orch = MLLMGlobalOrchestrator(cfg, args.d, vocab=cfg.vocab_size)
+    orch = MLLMGlobalOrchestrator(cfg, args.d, vocab=cfg.vocab_size,
+                                  pp=args.pp, microbatches=args.microbatches)
     probe = [sampler(np.random.default_rng(s), args.per) for s in range(args.d)]
     caps = orch.default_capacities(probe, margin=3.0)
     loader = PrefetchingLoader(orch, caps, examples_per_instance=args.per,
@@ -91,10 +103,15 @@ def main():
             loss = float(m["loss"])
             ema = loss if ema is None else 0.9 * ema + 0.1 * loss
             if it % 10 == 0 or it == args.steps - 1:
+                pipe = ""
+                if report.pipeline is not None:
+                    pipe = (f" pp={report.pipeline.pp} "
+                            f"fill={report.pipeline.fill_fraction:.2f} "
+                            f"mfu+{report.pipeline.mfu_uplift:.3f}")
                 print(f"step {it:4d} loss={loss:.4f} ema={ema:.4f} "
                       f"gnorm={float(m['grad_norm']):.2f} "
                       f"util={report.phase_utilization['llm']:.2f} "
-                      f"tok={int(m['tokens'])} "
+                      f"tok={int(m['tokens'])}{pipe} "
                       f"{(time.time()-t0)/(it+1):.2f}s/step", flush=True)
     finally:
         stats = loader.overlap_stats()

@@ -128,6 +128,13 @@ class ModelConfig:
     # ssm_block_d/ssm_chunk when a cache entry matches the call shape.
     kernel_autotune: bool = False
     autotune_cache: str | None = None  # path; None = default location
+    # Pipeline parallelism (docs/pipeline.md): number of stages the LLM
+    # backbone is partitioned into (1 = DP-only), microbatches per step
+    # (0 = auto: 2*pp_stages), and whether encoder microbatches are
+    # scheduled into the 1F1B warm-up/cool-down bubbles.
+    pp_stages: int = 1
+    pp_microbatches: int = 0
+    pp_bubble_fill: bool = True
     citation: str = ""
 
     # ------------------------------------------------------------------

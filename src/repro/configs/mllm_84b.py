@@ -1,4 +1,6 @@
 """Paper Table 1 MLLM-84B: 72B LLM + ViT-6B + Whisper-6B."""
+import dataclasses
+
 from repro.configs.base import EncoderConfig, ModelConfig
 
 CONFIG = ModelConfig(
@@ -25,3 +27,10 @@ CONFIG = ModelConfig(
     block_kv=128,
     citation="OrchMLLM Table 1 (MLLM-84B)",
 )
+
+# Pipeline-staged variant (the paper's 2560-GPU regime analogue): 80
+# backbone layers over 4 stages, 16 microbatches so the 1F1B steady
+# state saturates and the warm-up/cool-down bubbles can absorb the
+# encoder compute (docs/pipeline.md; benchmarks/pipeline_bubbles.py).
+STAGED_CONFIG = dataclasses.replace(
+    CONFIG, pp_stages=4, pp_microbatches=16, pp_bubble_fill=True)

@@ -41,6 +41,7 @@ __all__ = [
     "encoder_cost_model",
     "length_features",
     "llm_cost_model",
+    "phase_flops_per_unit",
     "serving_cost_model",
     "transformer_cost_coeffs",
 ]
@@ -293,6 +294,31 @@ def transformer_cost_coeffs(
 # scheduler, and the telemetry priors all route through these three
 # helpers, so calibrated coefficients have a single injection point
 # (``CostModel.with_coeffs`` on the helpers' output).
+
+
+def phase_flops_per_unit(cfg) -> dict[str, float]:
+    """Raw forward FLOPs behind ONE normalized cost unit, per phase.
+
+    Every phase's :class:`CostModel` is normalized to ``alpha = 1`` (only
+    the alpha/beta ratio matters for balancing *within* a phase), which
+    makes costs from different phases incommensurable.  The pipeline
+    scheduler (:mod:`repro.core.pipeline`) must place encoder microbatch
+    compute against LLM stage compute on ONE clock, so it needs the
+    un-normalized linear coefficient: per-token matmul FLOPs
+    ``lin = N * (8H^2 + 6HF)`` from :func:`transformer_cost_coeffs`.
+    ``cost * lin`` restores raw FLOPs (the quadratic term scales along,
+    since ``beta = quad/lin``).  Keyed ``"llm"`` plus each encoder name.
+    """
+    moe_k = cfg.experts_per_token if cfg.family == "moe" else 1
+    out = {
+        "llm": cfg.n_layers
+        * (8.0 * cfg.d_model**2
+           + 6.0 * cfg.d_model * max(cfg.d_ff, 1) * max(moe_k, 1))
+    }
+    for e in cfg.encoders:
+        out[e.name] = max(e.n_layers, 1) * (
+            8.0 * e.d_model**2 + 6.0 * e.d_model * e.d_ff)
+    return out
 
 
 def llm_cost_model(cfg) -> CostModel:

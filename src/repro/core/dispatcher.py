@@ -62,6 +62,12 @@ class DispatchPlan:
     # times (costs == cost_model.cost_from_features(features)).
     features: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros((0, 4)))
+    # Pipeline mode: per-(stage, shard) cost matrix, shape (pp, d) --
+    # stage cost = stage_fraction (calibrated per-layer cost x
+    # layers-on-stage, normalized) x the shard's f(S).  Empty when the
+    # dispatcher has no stage_fractions attached (pp = 1).
+    stage_costs: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0, 0)))
 
     @property
     def max_cost(self) -> float:
@@ -108,6 +114,10 @@ class BatchPostBalancingDispatcher:
         baseline).
       backend: "vectorized" (default) or "python" post-balancing engine.
       queue_depth: bound on in-flight plan-ahead submissions.
+      stage_fractions: pipeline mode -- per-stage share of this phase's
+        cost (layers-on-stage x per-layer cost, normalized to sum 1);
+        plans then carry a (pp, d) ``stage_costs`` matrix so the
+        orchestrator's microbatch scheduler balances per-STAGE loads.
     """
 
     def __init__(
@@ -123,9 +133,12 @@ class BatchPostBalancingDispatcher:
         balance: bool = True,
         backend: str = "vectorized",
         queue_depth: int = 2,
+        stage_fractions: Sequence[float] | np.ndarray | None = None,
     ) -> None:
         self.d = d
         self.cost_model = cost_model
+        self.stage_fractions = (None if stage_fractions is None
+                                else np.asarray(stage_fractions, np.float64))
         self.algorithm = algorithm
         self.instances_per_node = instances_per_node
         self.nodewise_method = nodewise_method
@@ -175,6 +188,9 @@ class BatchPostBalancingDispatcher:
         maxc = costs.max() if costs.size else 0.0
         util = float(costs.mean() / maxc) if maxc > 0 else 1.0
         solve_ms = (time.perf_counter() - t0) * 1e3
+        stage_costs = (np.outer(self.stage_fractions, costs)
+                       if self.stage_fractions is not None
+                       else np.zeros((0, 0)))
         return DispatchPlan(
             pi=pi,
             d=self.d,
@@ -184,6 +200,7 @@ class BatchPostBalancingDispatcher:
             utilization=util,
             solve_ms=solve_ms,
             features=features,
+            stage_costs=stage_costs,
         )
 
     # -- plan-ahead mode ------------------------------------------------

@@ -29,7 +29,9 @@ from repro.configs.base import ModelConfig
 from repro.core.communicator import CommPlan, build_comm_plan
 from repro.core.cost_model import encoder_cost_model, llm_cost_model
 from repro.core.dispatcher import BatchPostBalancingDispatcher, DispatchPlan
+from repro.core.pipeline import PipelinePlan, plan_pipeline
 from repro.core.rearrangement import Rearrangement, compose
+from repro.sharding.specs import stage_partition
 from repro.data.packing import pack_padded_stream, pack_stream
 from repro.data.synthetic import Example
 from repro.utils import round_up as _round_up
@@ -95,6 +97,9 @@ class OrchestratorReport:
     phase_features: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     coeff_version: int = -1
     replanned: bool = False
+    # Pipeline mode (pp > 1): the simulated 1F1B + bubble-fill schedule
+    # for this iteration (None when DP-only).
+    pipeline: PipelinePlan | None = None
 
 
 @dataclasses.dataclass
@@ -115,6 +120,8 @@ class PhasePlans:
     # no AdaptiveOrchestration is attached); plan_and_pack re-plans when
     # the version moved on (drift / calibration swap-in) before packing.
     coeff_version: int = -1
+    # Pipeline mode: 1F1B microbatch schedule + encoder bubble fill.
+    pipeline: PipelinePlan | None = None
 
     @property
     def features(self) -> dict[str, np.ndarray]:
@@ -164,9 +171,28 @@ class MLLMGlobalOrchestrator:
         concurrent_dispatch: bool = False,
         adaptive=None,
         metrics=None,
+        pp: int | None = None,
+        microbatches: int | None = None,
+        bubble_fill: bool | None = None,
     ) -> None:
         self.cfg = cfg
         self.d = d
+        # Pipeline mode (docs/pipeline.md): pp > 1 partitions the LLM
+        # backbone into stages and every plan_phases() additionally
+        # solves a 1F1B microbatch schedule with encoder bubble fill.
+        # None falls back to the config's pp_* knobs.
+        self.pp = int(pp if pp is not None else getattr(cfg, "pp_stages", 1))
+        self.microbatches = int(
+            microbatches if microbatches is not None
+            else getattr(cfg, "pp_microbatches", 0))
+        self.bubble_fill = bool(
+            bubble_fill if bubble_fill is not None
+            else getattr(cfg, "pp_bubble_fill", True))
+        self.stage_fractions = None
+        if self.pp > 1:
+            part = stage_partition(cfg.n_layers, self.pp)
+            self.stage_fractions = (
+                np.asarray(part, np.float64) / float(cfg.n_layers))
         # Observability: an optional MetricsRegistry (repro.obs.registry)
         # receives per-phase solve-time histograms and plan/replan
         # counters.  None keeps the orchestrator dependency-free; the
@@ -203,6 +229,7 @@ class MLLMGlobalOrchestrator:
             instances_per_node=instances_per_node,
             balance=balance,
             backend=backend,
+            stage_fractions=self.stage_fractions,
         )
         self.enc_dispatchers: dict[str, BatchPostBalancingDispatcher] = {}
         for e in cfg.encoders:
@@ -360,6 +387,22 @@ class MLLMGlobalOrchestrator:
                     chunk_cap=caps.chunk[e.name],
                 )
         phase_ms["compose"] = (time.perf_counter() - tc) * 1e3
+
+        # ---- Pipeline schedule (pp > 1): 1F1B microbatch split over
+        # the post-balanced per-rank batches + encoder bubble fill. ----
+        pipeline = None
+        if self.pp > 1:
+            pipeline = plan_pipeline(
+                cfg,
+                self.llm_dispatcher.cost_model,
+                llm_plan.dest_lengths,
+                {name: plan.costs for name, plan in enc_plans.items()},
+                pp=self.pp,
+                n_micro=self.microbatches,
+                bubble_fill=self.bubble_fill,
+            )
+            phase_ms["pipeline"] = pipeline.solve_ms
+
         if self.adaptive is not None:
             self.adaptive.record_plan_spans(phase_ms)
         if self._h_solve is not None:
@@ -374,6 +417,7 @@ class MLLMGlobalOrchestrator:
             phase_solve_ms=phase_ms,
             solve_ms=(time.perf_counter() - t0) * 1e3,
             coeff_version=coeff_version,
+            pipeline=pipeline,
         )
 
     def plan_ahead(
@@ -462,6 +506,7 @@ class MLLMGlobalOrchestrator:
         report.phase_features = plans.features
         report.coeff_version = plans.coeff_version
         report.replanned = replanned
+        report.pipeline = plans.pipeline
         if self._c_plans is not None:
             self._c_plans.inc(mode="overlapped" if overlapped else "sync")
         return batch, report

@@ -8,6 +8,12 @@ the same entrypoint runs the full configs under the production mesh.
     PYTHONPATH=src python -m repro.launch.train --arch qwen3_8b --smoke \
         --steps 20 --d 4
 
+Pipeline mode: ``--pp N`` (N > 1) partitions the LLM backbone into N
+stages and plans a 1F1B microbatch schedule with encoder bubble-fill
+per step (docs/pipeline.md); the ledger gains per-stage bubble series,
+the waterfall switches to its ``pipeline_bubble_s{k}`` components, and
+the Perfetto timeline gets one lane per stage.
+
 Observability: ``--metrics-dir DIR`` turns on the unified metrics plane
 (:mod:`repro.obs`): an OpenMetrics textfile (``metrics.prom``,
 atomically rewritten every ``--metrics-every`` steps), a crash-safe
@@ -117,6 +123,19 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--d", type=int, default=4, help="DP instances")
     ap.add_argument("--per", type=int, default=4, help="examples/instance")
+    ap.add_argument("--pp", type=int, default=None, metavar="STAGES",
+                    help="pipeline-parallel stages; >1 plans a 1F1B "
+                         "microbatch schedule with encoder bubble fill "
+                         "per step (docs/pipeline.md; default: the "
+                         "config's pp_stages)")
+    ap.add_argument("--microbatches", type=int, default=None, metavar="M",
+                    help="microbatches per pipeline iteration (default: "
+                         "the config's pp_microbatches, or 2*pp)")
+    ap.add_argument("--no-bubble-fill", action="store_true",
+                    help="pp > 1 only: schedule encoder microbatches as "
+                         "pipeline prologue/epilogue instead of filling "
+                         "the 1F1B bubbles (the ablation baseline of "
+                         "benchmarks/pipeline_bubbles.py)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0, help="data stream seed")
     ap.add_argument("--mesh", choices=["none", "host"], default="none",
@@ -300,8 +319,14 @@ def main() -> None:
                     os.path.join(manager.root, "*.corrupt*"))):
                 alerts.on_checkpoint_fallback(p, start_step)
 
-    orch = MLLMGlobalOrchestrator(cfg, cursor.d, vocab=cfg.vocab_size,
-                                  adaptive=adaptive, metrics=registry)
+    orch = MLLMGlobalOrchestrator(
+        cfg, cursor.d, vocab=cfg.vocab_size, adaptive=adaptive,
+        metrics=registry, pp=args.pp, microbatches=args.microbatches,
+        bubble_fill=False if args.no_bubble_fill else None)
+    if orch.pp > 1:
+        print(f"pipeline mode: pp={orch.pp} "
+              f"microbatches={orch.microbatches or 2 * orch.pp} "
+              f"bubble_fill={orch.bubble_fill} (docs/pipeline.md)")
     sampler = _sampler_for(cfg)
     probe = [sampler(np.random.default_rng(s), cursor.examples_per_instance)
              for s in range(cursor.d)]
@@ -341,6 +366,7 @@ def main() -> None:
     t0 = time.time()
     done = start_step
     pending_ckpt_ms = 0.0  # save wall charged to the NEXT step's waterfall
+    last_pipeline = None  # newest PipelinePlan (pp > 1): timeline lanes
     try:
         for it in range(start_step, args.steps):
             batch_np, report, _ = next(loader)
@@ -389,6 +415,12 @@ def main() -> None:
                 events = ledger.record_step(it, report=report,
                                             step_ms=step_ms, metrics=host_m)
                 alerts.on_ledger_events(events)
+                if report.pipeline is not None:
+                    # Per-stage bubble series + fill/uplift gauges; the
+                    # waterfall below picks the plan off the report and
+                    # switches to its pipeline_bubble_s{k} algebra.
+                    ledger.record_pipeline(it, report.pipeline)
+                    last_pipeline = report.pipeline
                 # The smoke path runs dense reference attention, so the
                 # tile fraction the Pallas kernels would have skipped IS
                 # dead compute actually paid this step -- but only for
@@ -448,7 +480,8 @@ def main() -> None:
         tl = build_timeline(
             trace_buffer=adaptive.trace if adaptive is not None else None,
             ledger=ledger, waterfall=waterfall,
-            checkpoint_ops=manager.ops if manager is not None else None)
+            checkpoint_ops=manager.ops if manager is not None else None,
+            pipeline=last_pipeline)
         with open(tl_path, "w") as f:
             json.dump(tl, f)
         triage_report = triage_now()

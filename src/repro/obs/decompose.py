@@ -49,9 +49,11 @@ from repro.obs.registry import MetricsRegistry, get_registry
 
 __all__ = ["GapWaterfall", "WaterfallStep", "COMPONENT_ORDER"]
 
-# Canonical component ordering (imbalance phases expand in report order).
+# Canonical component ordering (imbalance phases expand in report order;
+# pipeline_bubble stages expand when the run is pipelined, pp > 1).
 COMPONENT_ORDER = (
     "imbalance_*",
+    "pipeline_bubble_s*",
     "exposed_dispatch",
     "checkpoint_stall",
     "kernel_dead_tiles",
@@ -146,7 +148,8 @@ class GapWaterfall:
                 step_ms: float, exposed_ms: float | None = None,
                 metrics: Mapping[str, float] | None = None,
                 ckpt_ms: float = 0.0, dead_tile_frac: float = 0.0,
-                recompute_frac: float = 0.0) -> WaterfallStep:
+                recompute_frac: float = 0.0,
+                pipeline=None) -> WaterfallStep:
         """Attribute one step's gap.
 
         ``report`` is an ``OrchestratorReport`` (or anything with
@@ -156,45 +159,75 @@ class GapWaterfall:
         ``dead_tile_frac`` / ``recompute_frac`` are waste fractions of
         the useful compute (kernel padding tiles, preemption
         recompute).  ``metrics`` supplies ``moe_dropped_frac``.
+
+        ``pipeline`` switches to the pipeline-mode algebra: a
+        ``PipelinePlan`` (or its ``waterfall_inputs()`` mapping), taken
+        from ``report.pipeline`` automatically when present.  Devices
+        then live on a (d, pp) grid: per-stage unfilled bubble time
+        becomes a ``pipeline_bubble_s{k}`` component, the cross-rank
+        pipeline-makespan spread becomes ``imbalance_llm``, and closure
+        follows from the simulator identity ``useful + sum_k idle_k =
+        pp * rank_total`` per rank.
         """
         if report is not None:
             phase_costs = report.phase_costs
             if exposed_ms is None:
                 exposed_ms = report.exposed_ms
+            if pipeline is None:
+                pipeline = getattr(report, "pipeline", None)
+        if pipeline is not None and hasattr(pipeline, "waterfall_inputs"):
+            pipeline = pipeline.waterfall_inputs()
         phase_costs = phase_costs or {}
         exposed_ms = float(exposed_ms or 0.0)
         step_ms = float(step_ms)
         if step_ms <= 0:
             raise ValueError(f"step_ms must be positive, got {step_ms}")
 
-        maxes: dict[str, float] = {}
-        means: dict[str, float] = {}
-        for phase, costs in phase_costs.items():
-            arr = np.asarray(costs, dtype=np.float64)
-            if arr.size == 0:
-                continue
-            maxes[phase] = float(arr.max())
-            means[phase] = float(arr.mean())
-        sum_max = sum(maxes.values())
-
         # Host-side time is measured directly in ms; the remainder of
         # the step is compute, which calibrates the cost->ms scale.
         host_ms = min(exposed_ms + ckpt_ms, step_ms)
         compute_ms = max(step_ms - host_ms, 0.0)
-        scale_now = compute_ms / sum_max if sum_max > 0 else 0.0
-        # Attribute with the scale learned from PREVIOUS steps so the
-        # closure residual is a real check (warmup uses the current
-        # estimate: nothing to check against yet).
-        scale = self._scale if self._scale is not None else scale_now
-        warming = len(self.history) < self.warmup
 
         comps: dict[str, float] = {}
-        for phase in maxes:
-            comps[f"imbalance_{phase}"] = (
-                (maxes[phase] - means[phase]) * scale / step_ms)
+        if pipeline is not None:
+            # ---- pipeline mode: attribute on the (d, pp) device grid.
+            pp = int(pipeline["stages"])
+            stage_bubble = np.asarray(pipeline["stage_bubble"], np.float64)
+            totals = np.asarray(pipeline["rank_totals"], np.float64)
+            crit = float(pipeline["critical_cost"])
+            sum_max = crit  # cost on the critical path -> compute_ms
+            scale_now = compute_ms / crit if crit > 0 else 0.0
+            scale = self._scale if self._scale is not None else scale_now
+            for k in range(pp):
+                comps[f"pipeline_bubble_s{k}"] = (
+                    float(stage_bubble[k]) * scale / (pp * step_ms))
+            mean_total = float(totals.mean()) if totals.size else crit
+            comps["imbalance_llm"] = (crit - mean_total) * scale / step_ms
+            useful_raw = (float(pipeline["useful_per_device"])
+                          * scale / step_ms)
+        else:
+            maxes: dict[str, float] = {}
+            means: dict[str, float] = {}
+            for phase, costs in phase_costs.items():
+                arr = np.asarray(costs, dtype=np.float64)
+                if arr.size == 0:
+                    continue
+                maxes[phase] = float(arr.max())
+                means[phase] = float(arr.mean())
+            sum_max = sum(maxes.values())
+            scale_now = compute_ms / sum_max if sum_max > 0 else 0.0
+            # Attribute with the scale learned from PREVIOUS steps so the
+            # closure residual is a real check (warmup uses the current
+            # estimate: nothing to check against yet).
+            scale = self._scale if self._scale is not None else scale_now
+            for phase in maxes:
+                comps[f"imbalance_{phase}"] = (
+                    (maxes[phase] - means[phase]) * scale / step_ms)
+            useful_raw = sum(means.values()) * scale / step_ms
+        warming = len(self.history) < self.warmup
+
         comps["exposed_dispatch"] = min(exposed_ms, step_ms) / step_ms
         comps["checkpoint_stall"] = min(ckpt_ms, step_ms) / step_ms
-        useful_raw = sum(means.values()) * scale / step_ms
         drop_frac = float((metrics or {}).get("moe_dropped_frac", 0.0) or 0.0)
         comps["kernel_dead_tiles"] = max(dead_tile_frac, 0.0) * useful_raw
         comps["moe_drop"] = max(drop_frac, 0.0) * useful_raw

@@ -168,6 +168,19 @@ class StepLedger:
                                     "stale plan-ahead plans re-planned")
         self._g_metric = r.gauge("train_metric", "last train-step metrics",
                                  labels=("name",))
+        # Pipeline mode (docs/pipeline.md): per-stage unfilled bubble
+        # fraction + schedule-level fill/uplift gauges, published by
+        # ``record_pipeline`` when the orchestrator runs with pp > 1.
+        self._g_pipe_bubble = r.gauge(
+            "pipeline_bubble_frac",
+            "unfilled 1F1B bubble fraction of stage device time",
+            labels=("stage",))
+        self._g_pipe_fill = r.gauge(
+            "pipeline_fill_fraction",
+            "encoder compute placed / theoretical 1F1B bubble time")
+        self._g_pipe_uplift = r.gauge(
+            "pipeline_mfu_uplift",
+            "projected MFU delta of bubble fill vs no-fill 1F1B")
         # (step, value) series for the timeline's counter tracks.
         self.series: dict[str, list[tuple[int, float]]] = {}
         self.steps_recorded = 0
@@ -256,6 +269,27 @@ class StepLedger:
             if name.startswith(self.counter_track_prefixes):
                 self._track(name, step, value)
         return events
+
+    # ------------------------------------------------------------------
+    def record_pipeline(self, step: int, plan) -> None:
+        """Account one step's pipeline schedule (a ``PipelinePlan``).
+
+        Publishes per-stage unfilled-bubble fractions (device-time
+        share of each stage lane), the run's bubble-fill fraction and
+        the projected MFU uplift, and keeps the per-stage series for
+        the timeline / anomaly monitor."""
+        if plan is None:
+            return
+        denom = float(plan.rank_total.max()) * plan.d
+        stage_idle = plan.stage_idle.sum(axis=0)  # (pp,) over ranks
+        for s in range(plan.pp):
+            frac = stage_idle[s] / denom if denom > 0 else 0.0
+            self._g_pipe_bubble.set(frac, stage=str(s))
+            self._track(f"pipeline_bubble_s{s}", step, frac)
+        self._g_pipe_fill.set(plan.fill_fraction)
+        self._g_pipe_uplift.set(plan.mfu_uplift)
+        self._track("pipeline_fill_fraction", step, plan.fill_fraction)
+        self._track("pipeline_mfu_uplift", step, plan.mfu_uplift)
 
     # ------------------------------------------------------------------
     def record_kernel_stats(self, step: int, batch: Mapping[str, np.ndarray],

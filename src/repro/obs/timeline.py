@@ -23,10 +23,35 @@ from typing import Iterable, Mapping, Sequence
 
 __all__ = ["build_timeline", "export_timeline"]
 
-# pid blocks so the four sources never collide.
+# pid blocks so the five sources never collide.
 _ENGINE_PID_BASE = 1000
+_PIPELINE_PID = 7000
 _CKPT_PID = 8000
 _COUNTER_PID = 9000
+
+
+def _pipeline_events(plan) -> list[dict]:
+    """``PipelinePlan`` events (critical rank) -> one lane per stage.
+
+    Times are abstract cost units; 1 cost unit renders as 1 us so the
+    schedule SHAPE (warmup/steady/cooldown, encoder chunks in bubbles)
+    is inspectable even before the waterfall's cost->ms calibration.
+    """
+    events: list[dict] = [
+        {"name": "process_name", "ph": "M", "pid": _PIPELINE_PID,
+         "args": {"name": f"pipeline:rank{plan.critical_rank}"}}]
+    for s in range(plan.pp):
+        events.append({"name": "thread_name", "ph": "M",
+                       "pid": _PIPELINE_PID, "tid": s,
+                       "args": {"name": f"stage{s} ({plan.partition[s]}L)"}})
+    cat = {"F": "fwd", "B": "bwd", "encF": "enc_fill", "encB": "enc_fill"}
+    for ev in plan.events:
+        events.append({
+            "name": f"{ev.kind}{ev.micro}", "cat": cat[ev.kind], "ph": "X",
+            "pid": _PIPELINE_PID, "tid": ev.stage,
+            "ts": ev.start, "dur": max(ev.end - ev.start, 0.0),
+            "args": {"micro": ev.micro, "kind": ev.kind}})
+    return events
 
 
 def _engine_events(step_timings: Iterable, replica: int = 0) -> list[dict]:
@@ -108,7 +133,7 @@ def _counter_events(series: Mapping[str, Sequence[tuple[int, float]]],
 
 
 def build_timeline(*, trace_buffer=None, step_timings=None, ledger=None,
-                   waterfall=None, checkpoint_ops=None,
+                   waterfall=None, checkpoint_ops=None, pipeline=None,
                    series: Mapping[str, Sequence[tuple[int, float]]] | None = None,
                    ) -> dict:
     """Merge every available source into one Chrome-trace JSON object.
@@ -118,13 +143,17 @@ def build_timeline(*, trace_buffer=None, step_timings=None, ledger=None,
     orchestrator spans; checkpoint ops only exist when a
     ``CheckpointManager`` ran).  ``waterfall`` is a
     :class:`repro.obs.decompose.GapWaterfall` whose per-component
-    series join the counter tracks.
+    series join the counter tracks; ``pipeline`` a
+    :class:`repro.core.pipeline.PipelinePlan` whose critical-rank 1F1B
+    schedule renders as one lane per stage (pp > 1 runs).
     """
     events: list[dict] = []
     if trace_buffer is not None:
         events.extend(trace_buffer.to_chrome_trace()["traceEvents"])
     if step_timings is not None:
         events.extend(_engine_events(step_timings))
+    if pipeline is not None:
+        events.extend(_pipeline_events(pipeline))
     if checkpoint_ops is not None:
         events.extend(_checkpoint_events(checkpoint_ops))
     merged_series: dict[str, Sequence[tuple[int, float]]] = {}

@@ -31,8 +31,63 @@ __all__ = [
     "opt_state_specs",
     "batch_specs",
     "cache_sharding_specs",
+    "stage_partition",
     "to_shardings",
 ]
+
+
+def stage_partition(n_layers: int, pp: int,
+                    layer_costs=None) -> tuple[int, ...]:
+    """Contiguous partition of ``n_layers`` into ``pp`` pipeline stages.
+
+    Minimizes the max per-stage cost over contiguous splits (activations
+    only flow between adjacent stages, so stages must be contiguous).
+    ``layer_costs`` is an optional per-layer cost vector -- e.g. the
+    calibrated per-layer LLM cost from the telemetry fits -- defaulting
+    to uniform layers, where the split is the balanced floor/ceil one.
+    Returns layers-per-stage (len ``pp``, sums to ``n_layers``); every
+    stage gets at least one layer.
+    """
+    if pp < 1:
+        raise ValueError(f"pp must be >= 1, got {pp}")
+    if pp > n_layers:
+        raise ValueError(f"pp={pp} exceeds n_layers={n_layers}")
+    if pp == 1:
+        return (n_layers,)
+    if layer_costs is None:
+        base, extra = divmod(n_layers, pp)
+        # Heavier stages FIRST: warmup bubbles shrink toward the tail,
+        # so front-loading keeps the steady-state critical path tight.
+        return tuple(base + (1 if s < extra else 0) for s in range(pp))
+    costs = np.asarray(layer_costs, dtype=np.float64)
+    if costs.shape != (n_layers,):
+        raise ValueError(f"layer_costs must have shape ({n_layers},)")
+    prefix = np.concatenate([[0.0], np.cumsum(costs)])
+
+    def feasible(cap: float) -> tuple[int, ...] | None:
+        """Greedy: longest prefix per stage under ``cap``; leave enough
+        layers so every remaining stage can take at least one."""
+        out, lo = [], 0
+        for s in range(pp):
+            hi_max = n_layers - (pp - 1 - s)
+            hi = int(np.searchsorted(prefix, prefix[lo] + cap, side="right")) - 1
+            hi = min(max(hi, lo + 1), hi_max)
+            out.append(hi - lo)
+            lo = hi
+        return tuple(out) if lo == n_layers else None
+
+    # Binary search the min-max stage cost over the distinct candidates.
+    lo_cap, hi_cap = float(costs.max()), float(costs.sum())
+    best = feasible(hi_cap)
+    for _ in range(64):
+        mid = 0.5 * (lo_cap + hi_cap)
+        got = feasible(mid)
+        if got is not None:
+            best, hi_cap = got, mid
+        else:
+            lo_cap = mid
+    assert best is not None
+    return best
 
 
 def _leaf_spec(shape: tuple[int, ...], data: int, model: int,
@@ -61,9 +116,13 @@ def _leaf_spec(shape: tuple[int, ...], data: int, model: int,
 
 def param_specs(cfg: ModelConfig, params, mesh: Mesh):
     """Specs matching the params pytree.  Stacked-layer leaves (inside
-    'layers'/'enc_layers') skip their leading [L] dim."""
+    'layers'/'enc_layers') skip their leading [L] dim for FSDP/TP; when
+    the mesh carries a ``pp`` axis that dim is instead SHARDED over it --
+    stage s owns its contiguous layer slice (``stage_partition``), which
+    is exactly the pipeline placement expressed as a sharding."""
     data = mesh.shape.get("data", 1)
     model = mesh.shape.get("model", 1)
+    pp = mesh.shape.get("pp", 1)
 
     def walk(tree, stacked: bool):
         if isinstance(tree, dict):
@@ -71,7 +130,10 @@ def param_specs(cfg: ModelConfig, params, mesh: Mesh):
                 k: walk(v, stacked or k in ("layers", "enc_layers"))
                 for k, v in tree.items()
             }
-        return _leaf_spec(tree.shape, data, model, skip_dims=1 if stacked else 0)
+        spec = _leaf_spec(tree.shape, data, model, skip_dims=1 if stacked else 0)
+        if stacked and pp > 1 and tree.shape[0] % pp == 0:
+            spec = P("pp", *tuple(spec)[1:]) if len(spec) > 1 else P("pp")
+        return spec
 
     return walk(params, False)
 

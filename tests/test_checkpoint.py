@@ -5,7 +5,9 @@ Acceptance invariants:
     trajectory is bitwise identical to an uninterrupted run (>= 3 steps,
     mllm_10b);
   * elastic restore (DP 4 -> 2 and 2 -> 4) matches within numerical
-    tolerance, with post-balancing re-solved for the new shard count;
+    tolerance, with post-balancing re-solved for the new shard count --
+    including, in pipeline mode (pp > 1), the per-stage microbatch
+    split (docs/pipeline.md);
   * crash consistency: a kill mid-save (``.tmp`` litter) or a truncated
     leaf shard never corrupts a restore -- the manager falls back to the
     last complete checkpoint and flags the damaged one;
@@ -274,8 +276,8 @@ def _small_sampler(rng, per):
     return out
 
 
-def _mk_loader(cfg, d, per, *, start=0, seed=11):
-    orch = MLLMGlobalOrchestrator(cfg, d, vocab=cfg.vocab_size)
+def _mk_loader(cfg, d, per, *, start=0, seed=11, pp=1):
+    orch = MLLMGlobalOrchestrator(cfg, d, vocab=cfg.vocab_size, pp=pp)
     probe = [_small_sampler(np.random.default_rng(s), per) for s in range(d)]
     caps = orch.default_capacities(probe, margin=4.0)
     loader = PrefetchingLoader(orch, caps, examples_per_instance=per,
@@ -321,6 +323,49 @@ def test_loader_global_stream_invariant_under_dp_resplit():
         return sorted(np.bincount(seg[seg > 0]).tolist())
 
     assert seg_sizes(ba) == seg_sizes(bb)
+
+
+def test_elastic_resume_resolves_pipeline_for_new_dp():
+    """Elastic resume x pipeline mode (docs/pipeline.md): a pp>1 run
+    resumed onto a different DP degree must re-solve the per-stage
+    post-balancing for the new world size -- the 1F1B plan is a pure
+    function of the post-balanced shard, never checkpoint state."""
+    cfg = get_config("mllm_10b").smoke()
+    pp = 2
+    # "Before": d=4, consume two batches, note the cursor.
+    la, _ = _mk_loader(cfg, 4, 3, pp=pp)
+    for _ in range(2):
+        _, rep_a, _ = next(la)
+    cursor = la.cursor
+    la.close()
+    assert rep_a.pipeline is not None and rep_a.pipeline.d == 4
+    assert rep_a.pipeline.micro_costs.shape == (4, 2 * pp)
+
+    # Elastic "after": same global batch (4x3 -> 2x6), new DP degree.
+    c = DataCursor(seed=11, batch_index=cursor, examples_per_instance=3, d=4)
+    ec = elastic_cursor(c, 2)
+    assert (ec.d, ec.examples_per_instance) == (2, 6)
+    lb, orch_b = _mk_loader(cfg, ec.d, ec.examples_per_instance,
+                            start=ec.batch_index, pp=pp)
+    _, rep_b, _ = next(lb)
+    lb.close()
+
+    p = rep_b.pipeline
+    assert p is not None and p.d == 2 and p.pp == pp
+    # Per-stage post-balancing re-solved at the new world size: the LPT
+    # microbatch split exists per new rank and its cost matrix covers
+    # every (rank, microbatch) cell.
+    assert len(p.micro_assign) == 2
+    assert p.micro_costs.shape == (2, 2 * pp)
+    assert np.all(p.micro_costs > 0)
+    # The rebuilt dispatcher prices per-stage loads for the new world
+    # size: its plans carry outer(stage_fractions, costs) -> (pp, new_d).
+    assert orch_b.llm_dispatcher.stage_fractions is not None
+    assert orch_b.llm_dispatcher.stage_fractions.shape == (pp,)
+    assert np.allclose(p.stage_fractions, orch_b.llm_dispatcher.stage_fractions)
+    # Same schedule closure identity as an un-resumed plan.
+    total = p.stage_busy.sum(axis=1) + p.stage_idle.sum(axis=1)
+    assert np.allclose(total, p.pp * p.rank_total)
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,194 @@
+"""Docs stay in sync with the code (the CI ``docs`` job).
+
+Two contracts, no network access:
+
+* every internal markdown link in README.md + docs/*.md resolves — the
+  relative path exists, and a ``#anchor`` matches a GitHub-slugged
+  heading in the target file;
+* every command quoted in a ``sh``/``bash`` code fence is runnable in
+  shape: the ``python -m <module>`` / ``python <script>.py`` target
+  exists, and every ``--flag`` passed to it appears in that file's
+  argparse ``add_argument`` calls.  Docs promising flags that were
+  renamed or removed is exactly the rot this test exists to catch.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted([REPO / "README.md", *(REPO / "docs").glob("*.md")])
+
+assert DOC_FILES, "no markdown docs found"
+
+# ---------------------------------------------------------------------
+# Markdown parsing helpers
+# ---------------------------------------------------------------------
+
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+
+
+def _fences(text: str) -> list[tuple[str, str]]:
+    """All code fences as (info-string, body) tuples."""
+    out, lang, buf = [], None, []
+    for line in text.splitlines():
+        m = _FENCE_RE.match(line)
+        if m and lang is None:
+            lang, buf = m.group(1), []
+        elif m:
+            out.append((lang, "\n".join(buf)))
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+    return out
+
+
+def _outside_fences(text: str) -> str:
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE_RE.match(line):
+            in_fence = not in_fence
+        elif not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def _github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip code ticks + punctuation, lowercase,
+    spaces to hyphens."""
+    s = heading.strip().lower().replace("`", "")
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _anchors(path: Path) -> set[str]:
+    return {
+        _github_slug(m.group(2))
+        for m in map(_HEADING_RE.match, _outside_fences(path.read_text()).splitlines())
+        if m
+    }
+
+
+def _commands(text: str) -> list[str]:
+    """Shell commands from sh/bash fences, continuations joined,
+    comments stripped."""
+    cmds = []
+    for lang, body in _fences(text):
+        if lang not in ("sh", "bash", "shell", "console"):
+            continue
+        joined = re.sub(r"\\\n\s*", " ", body)
+        for line in joined.splitlines():
+            line = re.sub(r"(^|\s)#.*$", "", line).strip()
+            if line:
+                cmds.append(line)
+    return cmds
+
+
+def _module_source(cmd: str) -> Path | None:
+    """Source file a doc-quoted python command executes, if it names
+    one inside the repo (``python -m repro.x.y`` / ``python path.py``)."""
+    m = re.search(r"python3?\s+-m\s+([\w.]+)", cmd)
+    if m:
+        mod = m.group(1)
+        if mod == "pytest":
+            return None
+        root = "src" if mod.split(".")[0] == "repro" else "."
+        p = REPO / root / (mod.replace(".", "/") + ".py")
+        q = REPO / root / mod.replace(".", "/") / "__main__.py"
+        return p if p.exists() or not q.exists() else q
+    m = re.search(r"python3?\s+([\w./-]+\.py)", cmd)
+    if m:
+        return REPO / m.group(1)
+    return None
+
+
+def _flags(cmd: str) -> list[str]:
+    # Tolerate [--optional] notation and trailing punctuation.
+    return [
+        t.strip("[],;:")
+        for t in cmd.replace("[", " ").replace("]", " ").split()
+        if t.startswith("--")
+    ]
+
+
+# ---------------------------------------------------------------------
+# Internal links
+# ---------------------------------------------------------------------
+
+def _links():
+    for doc in DOC_FILES:
+        for m in _LINK_RE.finditer(doc.read_text()):
+            yield doc, m.group(1)
+
+
+@pytest.mark.parametrize(
+    "doc,target",
+    [pytest.param(d, t, id=f"{d.name}:{t}") for d, t in _links()],
+)
+def test_internal_links_resolve(doc, target):
+    if target.startswith(("http://", "https://", "mailto:")):
+        pytest.skip("external link (not checked: no network in CI)")
+    path_part, _, anchor = target.partition("#")
+    dest = (doc.parent / path_part).resolve() if path_part else doc
+    assert dest.exists(), f"{doc.name}: broken link target {target!r}"
+    if anchor:
+        assert dest.suffix == ".md", f"{doc.name}: anchor on non-markdown {target!r}"
+        slugs = _anchors(dest)
+        assert anchor in slugs, (
+            f"{doc.name}: anchor #{anchor} not in {dest.name} "
+            f"(headings: {sorted(slugs)})"
+        )
+
+
+def test_readme_links_every_docs_page():
+    readme = (REPO / "README.md").read_text()
+    for page in sorted((REPO / "docs").glob("*.md")):
+        assert f"docs/{page.name}" in readme, (
+            f"docs/{page.name} is not linked from the README index"
+        )
+
+
+def test_readme_is_a_short_index():
+    # The deep content lives in docs/; the README stays a quickstart.
+    n = len((REPO / "README.md").read_text().splitlines())
+    assert n < 150, f"README.md has {n} lines; keep it <150 and move detail to docs/"
+
+
+# ---------------------------------------------------------------------
+# Quoted commands and flags exist
+# ---------------------------------------------------------------------
+
+def _quoted_commands():
+    for doc in DOC_FILES:
+        for cmd in _commands(doc.read_text()):
+            src = _module_source(cmd)
+            if src is not None:
+                yield doc, cmd, src
+
+
+CASES = list(_quoted_commands())
+
+
+def test_docs_quote_commands_at_all():
+    # The extractor going blind (fence syntax drift, regex rot) must
+    # fail loudly rather than silently passing an empty parametrize.
+    assert len(CASES) >= 15, f"only {len(CASES)} commands extracted from docs"
+    assert any("repro.launch.train" in c for _, c, _ in CASES)
+    assert any("pipeline_bubbles" in c for _, c, _ in CASES)
+
+
+@pytest.mark.parametrize(
+    "doc,cmd,src",
+    [pytest.param(d, c, s, id=f"{d.name}:{c[:60]}") for d, c, s in CASES],
+)
+def test_quoted_command_targets_and_flags_exist(doc, cmd, src):
+    assert src.exists(), f"{doc.name} quotes {cmd!r} but {src} does not exist"
+    text = src.read_text()
+    for flag in _flags(cmd):
+        pat = re.compile(r"add_argument\(\s*['\"]" + re.escape(flag) + r"['\"]")
+        assert pat.search(text), (
+            f"{doc.name} quotes flag {flag} for {cmd.split()[0]}... "
+            f"but {src.relative_to(REPO)} defines no such argument"
+        )
